@@ -1,0 +1,97 @@
+"""Shared benchmark substrate: a pretrained small model + the QPruner loop.
+
+Paper tables are reproduced at CPU-feasible scale: an 8-layer llama-like
+model pretrained on the synthetic instruct stream until the zero-shot
+suite is solidly above chance, then compressed/recovered exactly like the
+paper's LLaMA-7B. The *relative* orderings the paper claims are the
+reproduction targets; absolute accuracies obviously differ from 7B runs.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import peft
+from repro.core.qpruner import QPrunerConfig, QPrunerPipeline
+from repro.data.pipeline import DataConfig, SyntheticInstruct
+from repro.eval import tasks as ev
+from repro.models import model_zoo as zoo
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.trainer import make_qpruner_train_step, make_train_step
+
+BENCH_SEQ = 64
+BENCH_BATCH = 32
+
+
+def bench_config():
+    return zoo.get_smoke_config("llama7b_like").with_(
+        n_layers=8, d_model=128, n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=512,
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def pretrained_model(steps: int = 150):
+    """(cfg, params, stream) — cached across benchmark tables."""
+    cfg = bench_config()
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=BENCH_SEQ,
+                    global_batch=BENCH_BATCH, seed=0)
+    stream = SyntheticInstruct(dc)
+    step = jax.jit(make_train_step(
+        zoo.train_loss_fn(cfg),
+        OptimizerConfig(lr=3e-3, warmup_steps=10, total_steps=steps),
+    ))
+    state = {"params": params, "opt": adamw_init(params)}
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        state, m = step(state, b)
+    return cfg, state["params"], stream
+
+
+def make_recover_fn(stream, steps: int, lr: float = 1e-3):
+    def recover(cfg2, qparams, adapters):
+        if adapters is None:
+            return None
+        lf = zoo.train_loss_fn(cfg2)
+        st_fn = jax.jit(make_qpruner_train_step(
+            lambda p, b, a: lf(p, b, adapters=a),
+            OptimizerConfig(lr=lr, warmup_steps=2, total_steps=steps),
+        ))
+        s = {"adapters": adapters, "opt": adamw_init(adapters)}
+        for _ in range(steps):
+            b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+            s, _ = st_fn(s, qparams, b)
+        return s["adapters"]
+
+    return recover
+
+
+def make_eval_fn(n: int = 48):
+    def evaluate(cfg2, qparams, adapters):
+        return ev.evaluate_all(cfg2, qparams, n=n, adapters=adapters)["mean"]
+
+    return evaluate
+
+
+def eval_per_task(cfg2, qparams, adapters, n: int = 48):
+    return ev.evaluate_all(cfg2, qparams, n=n, adapters=adapters)
+
+
+def build_pipeline(qcfg: QPrunerConfig, recover_steps: int = 25):
+    cfg, params, stream = pretrained_model()
+    calib = [
+        {k: jnp.asarray(v) for k, v in stream.next_batch().items()} for _ in range(2)
+    ]
+    return QPrunerPipeline(
+        cfg, params, qcfg, calib,
+        make_recover_fn(stream, recover_steps),
+        make_eval_fn(),
+    )
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,93 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DOC = """Optimized-configuration sweep (§Perf appendix).
+
+Re-runs every cell that exceeded the 16 GB/device HBM budget (or was
+collective-dominated) under the §Perf lever set appropriate to its kind:
+
+  train:   sequence-parallel activations + masked-block skipping
+  decode:  int8 KV cache (+ serve sharding when collective-bound)
+  prefill: masked-block skipping
+
+Baselines stay untouched in runs/dryrun_*.jsonl; this writes
+runs/dryrun_optimized.jsonl and prints the before/after table.
+"""
+__doc__ = _DOC
+
+import json
+from pathlib import Path
+
+from repro.distributed import sharding
+from repro.distributed.sharding import RULES
+from repro.launch import dryrun
+from repro.models import model_zoo as zoo
+
+SERVE_RULES = RULES.with_overrides(embed=())
+SP_RULES = RULES.with_overrides(seq_act=("model",))
+
+
+def run(multi_pod=False):
+    recs = []
+    for arch in zoo.ARCH_IDS:
+        if arch == "llama7b_like":
+            continue
+        for shape, cell in zoo.SHAPES.items():
+            cfg = zoo.get_config(arch)
+            ok, _ = zoo.cell_supported(cfg, shape)
+            if not ok:
+                continue
+            overrides, rules = {}, RULES
+            if cell.kind == "train":
+                overrides = {"attn_block_skip": True}
+                rules = SP_RULES
+            elif cell.kind == "prefill":
+                overrides = {"attn_block_skip": True}
+            else:  # decode
+                overrides = {"kv_cache_dtype": "int8", "attn_bf16_dots": True}
+                if cfg.family in ("hybrid", "ssm"):
+                    rules = SERVE_RULES  # collective-bound cells
+            if cfg.family in ("ssm",):
+                overrides.pop("kv_cache_dtype", None)  # no attention cache
+                overrides.pop("attn_block_skip", None)
+
+            import repro.models.model_zoo as zm
+
+            orig = zm.get_config
+            if overrides:
+                zm.get_config = (
+                    lambda name, _o=orig, _a=arch, _ov=overrides:
+                    _o(name).with_(**_ov) if name == _a else _o(name)
+                )
+            if rules is SP_RULES:
+                sharding.set_activation_rules(SP_RULES)
+            try:
+                rec = dryrun.run_cell(arch, shape, multi_pod=multi_pod,
+                                      rules=rules, verbose=False)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "error": str(e)[:500],
+                       "supported": True}
+            finally:
+                zm.get_config = orig
+                sharding.set_activation_rules(None)
+            rec["levers"] = {**overrides, "rules": "SP" if rules is SP_RULES
+                             else ("serve" if rules is SERVE_RULES else "default")}
+            recs.append(rec)
+            if "error" not in rec:
+                print(f"{arch:20s} {shape:12s} peak "
+                      f"{rec['per_device_peak_bytes']/1e9:6.2f}GB "
+                      f"dom={rec['dominant']}")
+            else:
+                print(f"{arch:20s} {shape:12s} ERROR {rec['error'][:80]}")
+    out = Path("runs/dryrun_optimized.jsonl")
+    with out.open("w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+    over = [r for r in recs if "error" not in r
+            and r["per_device_peak_bytes"] > 16e9]
+    print(f"\n{len(recs)} cells; still over 16GB: "
+          f"{[(r['arch'], r['shape'], round(r['per_device_peak_bytes']/1e9,1)) for r in over]}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DOC = """§Perf hillclimbing: hypothesis → change → measure → validate.
+
+Three cells (selection per the brief):
+  A. qwen15_32b × decode_32k   — worst cell: memory-dominated AND over
+     HBM budget (77 GB/dev bf16 cache);
+  B. recurrentgemma_9b × decode_32k — most collective-bound cell
+     (FSDP weight all-gathers dominate a decode step);
+  C. llama7b_like × train_4k   — the paper-representative cell: full
+     fine-tune baseline vs QPruner recovery (frozen NF4 base + LoRA),
+     then beyond-paper levers.
+
+Each iteration logs: hypothesis, predicted effect (napkin math), the
+measured before/after roofline terms, verdict. Output appends to
+runs/perf_iterations.jsonl and prints the §Perf markdown log.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_iterations
+"""
+__doc__ = _DOC
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import peft
+from repro.core.quantization import QuantConfig, quant_bytes
+from repro.distributed import sharding
+from repro.distributed.sharding import RULES, build_sharding, spec_for
+from repro.launch import dryrun
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.xla_cost import collective_cost, jaxpr_cost
+from repro.models import model_zoo as zoo
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.trainer import make_qpruner_train_step
+
+OUT = Path("runs/perf_iterations.jsonl")
+
+
+def measure(arch, shape, *, overrides=None, rules=RULES, tag=""):
+    """run_cell with config overrides; returns the record."""
+    import repro.models.model_zoo as zoo_mod
+
+    orig = zoo_mod.get_config
+    if overrides:
+        zoo_mod.get_config = lambda name, _o=orig: _o(name).with_(**overrides) if name == arch else _o(name)
+    try:
+        rec = dryrun.run_cell(arch, shape, rules=rules, verbose=False)
+    finally:
+        zoo_mod.get_config = orig
+    rec["tag"] = tag
+    return rec
+
+
+def fmt(rec):
+    return (f"t_c={rec['t_compute_s']*1e3:8.2f}ms t_m={rec['t_memory_s']*1e3:8.2f}ms "
+            f"t_x={rec['t_collective_s']*1e3:6.2f}ms peak={rec['per_device_peak_bytes']/1e9:6.2f}GB "
+            f"dom={rec['dominant']}")
+
+
+def log(lines, rec, hypothesis, verdict=""):
+    lines.append(f"- **{rec['tag']}** — {hypothesis}")
+    lines.append(f"  - {fmt(rec)}{('  → ' + verdict) if verdict else ''}")
+    with OUT.open("a") as f:
+        f.write(json.dumps(rec | {"hypothesis": hypothesis, "verdict": verdict}) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Cell C: the paper-representative QPruner recovery step
+# ---------------------------------------------------------------------------
+
+
+def _adapter_axes(w_axes):
+    return {"a": tuple(w_axes[:-1]) + (None,),
+            "b": tuple(w_axes[:-2]) + (None, w_axes[-1])}
+
+
+def build_qpruner_cell(mesh, *, rank=16, overrides=None):
+    """llama7b_like train_4k with a frozen NF4 QTensor base + LoRA state."""
+    import re
+
+    from repro.core.pruning import flatten_params, unflatten_params
+    from repro.core.qpruner import _QUANTIZABLE
+    from repro.core.quantization import qtensor_from_dense
+
+    cfg = zoo.get_config("llama7b_like")
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    cell = zoo.SHAPES["train_4k"]
+    params = jax.eval_shape(lambda k: zoo.init_fn(cfg)(cfg, k), jax.random.PRNGKey(0))
+    axes = zoo.axes_fn(cfg)(cfg)
+    lcfg = peft.LoraConfig(rank=rank, init="gaussian")
+    qc = QuantConfig("nf4", 64, True)
+
+    def quantize_and_adapters(p):
+        flat = flatten_params(p)
+        qflat, aflat = {}, {}
+        key = jax.random.PRNGKey(0)
+        for path, w in flat.items():
+            if _QUANTIZABLE.match(path) and w.ndim >= 2:
+                qflat[path] = qtensor_from_dense(w.astype(jnp.float32), qc)
+                lead = tuple(w.shape[:-2])
+                aflat[path] = peft.gaussian_init(key, w.shape[-2], w.shape[-1], lcfg, lead)
+            else:
+                qflat[path] = w
+        return unflatten_params(qflat), unflatten_params(aflat)
+
+    qparams, adapters = jax.eval_shape(quantize_and_adapters, params)
+
+    # axes trees
+    flat_axes = flatten_params_axes(axes)
+    a_axes = {}
+    for path, ax in flat_axes.items():
+        if _QUANTIZABLE.match(path):
+            a_axes[path] = _adapter_axes(ax)
+    from repro.core.pruning import unflatten_params as unf
+
+    ad_axes = unf(a_axes)
+    q_shard = build_sharding(qparams, axes, mesh)
+    a_shard = build_sharding(adapters, ad_axes, mesh)
+
+    loss_fn = zoo.train_loss_fn(cfg)
+    step = make_qpruner_train_step(
+        lambda p, b, a: loss_fn(p, b, adapters=a),
+        OptimizerConfig(), grad_accum=16,
+    )
+    opt = jax.eval_shape(adamw_init, adapters)
+    opt_shard = {"m": a_shard, "v": a_shard,
+                 "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+    state = {"adapters": adapters, "opt": opt}
+    state_shard = {"adapters": a_shard, "opt": opt_shard}
+    batch = zoo.input_specs(cfg, "train_4k")["batch"]
+    b_shard = {k: jax.sharding.NamedSharding(
+        mesh, spec_for(v.shape, ("batch",) + (None,) * (len(v.shape) - 1), mesh))
+        for k, v in batch.items()}
+    m_shard = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        {"loss": 0, "grad_norm": 0},
+    )
+    return (cfg, step, (state, qparams, batch),
+            (state_shard, q_shard, b_shard), (state_shard, m_shard))
+
+
+def flatten_params_axes(axes):
+    from repro.core.pruning import flatten_params
+
+    # axes leaves are tuples → flatten with tuple-leaf detection
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else k, v)
+        else:
+            flat[prefix] = node
+
+    rec("", axes)
+    return flat
+
+
+def measure_qpruner_cell(tag, *, rank=16, overrides=None):
+    mesh = make_production_mesh()
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cfg, step, args, in_sh, out_sh = build_qpruner_cell(mesh, rank=rank, overrides=overrides)
+    t0 = time.time()
+    jcost = jaxpr_cost(jax.make_jaxpr(step)(*args))
+    with mesh:
+        compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=(0,)).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    coll = collective_cost(compiled.as_text())
+    flops = float(jcost["flops"])
+    bytes_low = float(jcost["bytes_low"])
+
+    # weight-stream adjustment: the jnp oracle dequantises QTensors to a
+    # dense f32 matrix before each dot, so the jaxpr charges 4 B/param;
+    # the Pallas kernel (deployment path) streams packed codes at
+    # 0.516 B/param. Subtract the difference for every base-weight read.
+    n_base = zoo.param_count(cfg) - cfg.vocab_size * cfg.d_model * 2
+    qc = QuantConfig("nf4", 64, True)
+    reads_per_step = 2 * 16  # fwd + bwd(dL/dx), × accum microbatches
+    dense_read = n_base * 4.0 * reads_per_step
+    packed_read = n_base * qc.bytes_per_param() * reads_per_step
+    bytes_adj = bytes_low - (dense_read - packed_read)
+
+    cell = zoo.SHAPES["train_4k"]
+    rec = {
+        "arch": "llama7b_like", "shape": "train_4k(qpruner)", "tag": tag,
+        "t_compute_s": flops / (n_chips * HW["peak_flops_bf16"]),
+        "t_memory_s": bytes_adj / (n_chips * HW["hbm_bw"]),
+        "t_memory_unadjusted_s": bytes_low / (n_chips * HW["hbm_bw"]),
+        "t_collective_s": sum(coll.values()) / HW["ici_bw"],
+        "per_device_peak_bytes": (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes - mem.alias_size_in_bytes),
+        "hlo_flops": flops,
+        "opt_state_bytes_global": sum(
+            int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(
+                jax.eval_shape(lambda: args[0]["opt"]))
+        ) if False else None,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    rec["dominant"] = max(
+        [("compute", rec["t_compute_s"]), ("memory", rec["t_memory_s"]),
+         ("collective", rec["t_collective_s"])], key=lambda kv: kv[1])[0]
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def main():
+    lines = ["# §Perf iteration log", ""]
+
+    # ---------------- Cell A: qwen15_32b decode_32k ----------------
+    lines.append("## Cell A — qwen15_32b × decode_32k (memory-bound, over-budget)")
+    base = measure("qwen15_32b", "decode_32k", tag="A0 baseline")
+    log(lines, base, "baseline: bf16 cache (2.7 TB global), f32 attention dots")
+
+    r = measure("qwen15_32b", "decode_32k", overrides={"attn_bf16_dots": True},
+                tag="A1 bf16-dots")
+    v = f"t_m {base['t_memory_s']*1e3:.1f}→{r['t_memory_s']*1e3:.1f}ms"
+    log(lines, r, "H: f32 casts double the attention read bytes; MXU takes bf16 "
+                  "with f32 accumulate → predict ~2× lower t_m", v)
+    a1 = r
+
+    r = measure("qwen15_32b", "decode_32k",
+                overrides={"kv_cache_dtype": "int8"}, tag="A2 int8-kv")
+    v = (f"peak {base['per_device_peak_bytes']/1e9:.1f}→{r['per_device_peak_bytes']/1e9:.1f}GB, "
+         f"t_m {base['t_memory_s']*1e3:.1f}→{r['t_memory_s']*1e3:.1f}ms")
+    log(lines, r, "H: QPruner-style int8 KV cache halves resident cache AND "
+                  "streamed bytes (scales fold in post-dot) → predict ~2× on both", v)
+
+    serve_rules = RULES.with_overrides(embed=())
+    r = measure("qwen15_32b", "decode_32k", overrides={"kv_cache_dtype": "int8"},
+                rules=serve_rules, tag="A3 int8-kv + no-FSDP")
+    v = f"t_x {base['t_collective_s']*1e3:.2f}→{r['t_collective_s']*1e3:.2f}ms"
+    log(lines, r, "H: FSDP weight all-gathers are pure overhead at decode "
+                  "(no optimizer to amortise); replicate over data → "
+                  "all-gather bytes ≈ 0", v)
+
+    # ---------------- Cell B: recurrentgemma decode ----------------
+    lines.append("")
+    lines.append("## Cell B — recurrentgemma_9b × decode_32k (collective-bound)")
+    base = measure("recurrentgemma_9b", "decode_32k", tag="B0 baseline")
+    log(lines, base, "baseline: t_x dominated by 269 MB of all-gather/step "
+                     "(FSDP'd weights re-gathered every token)")
+    r = measure("recurrentgemma_9b", "decode_32k", rules=serve_rules,
+                tag="B1 no-FSDP-serve")
+    v = f"t_x {base['t_collective_s']*1e3:.2f}→{r['t_collective_s']*1e3:.2f}ms, dom={r['dominant']}"
+    log(lines, r, "H: weights replicated over 'data' for serving (params fit "
+                  "at 0.7 GB/dev TP-only) → collective term collapses", v)
+    r2 = measure("recurrentgemma_9b", "decode_32k", rules=serve_rules,
+                 overrides={"attn_bf16_dots": True, "kv_cache_dtype": "int8"},
+                 tag="B2 +bf16-dots+int8kv")
+    log(lines, r2, "H: with collectives gone the cell is memory-bound on the "
+                   "local-attn cache; int8 cache + bf16 dots shave the rest",
+        f"t_m {r['t_memory_s']*1e3:.2f}→{r2['t_memory_s']*1e3:.2f}ms")
+
+    # ---------------- Cell C: paper-representative ----------------
+    lines.append("")
+    lines.append("## Cell C — llama7b_like × train_4k (paper-representative)")
+    base = dryrun.run_cell("llama7b_like", "train_4k", verbose=False)
+    base["tag"] = "C0 full-FT baseline"
+    log(lines, base, "baseline: full bf16 fine-tune, AdamW fp32 states "
+                     "(the paper's 'full fine-tuning is impractical' row)")
+    r = measure_qpruner_cell("C1 QPruner recovery (paper)")
+    v = (f"peak {base['per_device_peak_bytes']/1e9:.1f}→{r['per_device_peak_bytes']/1e9:.1f}GB; "
+         f"t_m {base['t_memory_s']*1e3:.0f}→{r['t_memory_s']*1e3:.0f}ms "
+         f"(unadjusted {r['t_memory_unadjusted_s']*1e3:.0f}ms)")
+    log(lines, r, "PAPER-FAITHFUL: frozen NF4 base (packed 0.52 B/param stream) "
+                  "+ LoRA r=16; optimizer state collapses to adapter-sized", v)
+    sharding.set_activation_rules(sharding.RULES.with_overrides(seq_act=("model",)))
+    try:
+        r2 = measure_qpruner_cell("C2 + sequence-parallel activations")
+    finally:
+        sharding.set_activation_rules(None)
+    log(lines, r2, "BEYOND-PAPER: shard activation seq over 'model' (Megatron-SP) "
+                   "→ remat carries /16",
+        f"peak {r['per_device_peak_bytes']/1e9:.2f}→{r2['per_device_peak_bytes']/1e9:.2f}GB")
+
+    # ---------------- Cell E: compute-bound cells — block skipping ----------
+    lines.append("")
+    lines.append("## Cell E — compute-bound cells: masked-block skipping")
+    base = measure("mixtral_8x22b", "train_4k", tag="E0 mixtral train baseline")
+    log(lines, base, "baseline: chunked attention computes ALL kv blocks then "
+                     "masks — causal upper triangle is wasted MXU work")
+    r = measure("mixtral_8x22b", "train_4k",
+                overrides={"attn_block_skip": True}, tag="E1 +block-skip")
+    v = f"t_c {base['t_compute_s']*1e3:.0f}→{r['t_compute_s']*1e3:.0f}ms"
+    log(lines, r, "H: lax.cond-skip fully-masked blocks → causal saves ~½ of "
+                  "attention FLOPs (≈18% of this cell's total)", v)
+
+    base = measure("mixtral_8x22b", "prefill_32k", tag="E2 mixtral prefill baseline")
+    log(lines, base, "baseline: SWA window 4096 at S=32k — ~84% of kv blocks "
+                     "fully outside the window, all currently computed")
+    r = measure("mixtral_8x22b", "prefill_32k",
+                overrides={"attn_block_skip": True}, tag="E3 +block-skip")
+    v = (f"t_c {base['t_compute_s']*1e3:.0f}→{r['t_compute_s']*1e3:.0f}ms, "
+         f"t_m {base['t_memory_s']*1e3:.0f}→{r['t_memory_s']*1e3:.0f}ms "
+         "(cond accounting = branch mean; true window skip is larger)")
+    log(lines, r, "H: window-limited prefill touches ≤(W/kv_chunk+1)/nk ≈ 16% "
+                  "of blocks → large t_c cut (accounting shows the 2-branch "
+                  "mean = conservative 50%)", v)
+
+    # ---------------- bonus: worst train cell ----------------
+    lines.append("")
+    lines.append("## Bonus — granite_34b × train_4k (worst train-memory cell)")
+    base = measure("granite_34b", "train_4k", tag="D0 baseline")
+    log(lines, base, "baseline: 17.3 GB/dev — remat carry stack [88,1,4096,6144]f32")
+    sharding.set_activation_rules(sharding.RULES.with_overrides(seq_act=("model",)))
+    try:
+        r = measure("granite_34b", "train_4k", tag="D1 sequence-parallel")
+    finally:
+        sharding.set_activation_rules(None)
+    log(lines, r, "H: SP shards the carry stack 16× → predict ~2× peak cut "
+                  "(params/opt unchanged)",
+        f"peak {base['per_device_peak_bytes']/1e9:.1f}→{r['per_device_peak_bytes']/1e9:.1f}GB")
+
+    print("\n".join(lines))
+    Path("runs/perf_log.md").write_text("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

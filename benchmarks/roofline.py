@@ -1,0 +1,73 @@
+"""Roofline reporter: reads runs/dryrun_*.jsonl → markdown tables.
+
+Per (arch × shape × mesh): the three terms (compute / memory /
+collective) in seconds, the dominant term, MODEL_FLOPS/HLO ratio, and
+per-device peak bytes. This is deliverable (g)'s table generator —
+EXPERIMENTS.md §Roofline embeds its output.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: str) -> list[dict]:
+    return [json.loads(l) for l in open(path)] if Path(path).exists() else []
+
+
+def _useful(r: dict) -> float:
+    """Recompute MODEL_FLOPS/HLO live (analytics may improve after a sweep)."""
+    try:
+        from repro.models import model_zoo as zoo
+
+        cfg = zoo.get_config(r["arch"])
+        return zoo.model_flops(cfg, r["shape"]) / max(r["hlo_flops"], 1.0)
+    except Exception:
+        return r.get("useful_flops_ratio") or 0.0
+
+
+def table(records: list[dict]) -> list[str]:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "useful/HLO | peak GB/dev | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if not r.get("supported"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | "
+                f"{r.get('skip_reason', '')[:60]} |"
+            )
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: {r['error'][:50]} |")
+            continue
+        peak = r["per_device_peak_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} ms | "
+            f"{r['t_memory_s']*1e3:.2f} ms | {r['t_collective_s']*1e3:.2f} ms | "
+            f"{r['dominant']} | {_useful(r):.2f} | {peak:.2f} | "
+            f"{'yes' if peak <= 16 else 'NO'} |"
+        )
+    return lines
+
+
+def main(fast: bool = False) -> list[str]:
+    out = []
+    for mesh, path in (
+        ("single-pod 16x16 (256 chips)", "runs/dryrun_single.jsonl"),
+        ("multi-pod 2x16x16 (512 chips)", "runs/dryrun_multi.jsonl"),
+    ):
+        recs = load(path)
+        out.append(f"## {mesh} — {len([r for r in recs if r.get('supported') and 'error' not in r])} compiled cells")
+        if recs:
+            out.extend(table(recs))
+        else:
+            out.append(f"(run `python -m repro.launch.dryrun --all` first → {path})")
+        out.append("")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

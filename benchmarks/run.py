@@ -1,0 +1,57 @@
+"""Benchmark driver: one function per paper table. CSV to stdout.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1,...]
+
+Tables: table1 (compression×rates), table2 (ablations), fig1 (motivating),
+fig3 (BO Pareto + cost), kernels (microbench + v5e roofline), roofline
+(dry-run term tables). ``--fast`` trims iterations for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        fig1_motivating,
+        fig3_pareto,
+        kernel_bench,
+        roofline,
+        table1_compression,
+        table2_ablations,
+    )
+
+    suites = {
+        "kernels": kernel_bench.main,
+        "roofline": roofline.main,
+        "fig1": fig1_motivating.main,
+        "table2": table2_ablations.main,
+        "fig3": fig3_pareto.main,
+        "table1": table1_compression.main,
+    }
+    wanted = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)
+    failures = 0
+    for name in wanted:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            for line in suites[name](fast=args.fast):
+                print(line)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+        print(f"===== {name} done in {time.time()-t0:.0f}s =====")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 2: ablations at 20% pruning on the bench model.
+
+Axes (exactly the paper's): 4-bit dtype (NF4 vs FP4), adapter init
+(LoftQ vs Gaussian vs PiSSA), LoftQ iteration count (1/2/4), importance
+estimation order (Element¹ vs Element²).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, eval_per_task
+from repro.core import peft
+from repro.core.qpruner import QPrunerConfig, quantize_blocks
+
+
+def _run_variant(qcfg: QPrunerConfig, recover_steps=25) -> dict:
+    pipe = build_pipeline(qcfg, recover_steps)
+    pipe.prune()
+    bits = np.full(pipe.cfg.n_layers, 4)
+    qp, ad, _ = quantize_blocks(pipe.cfg, pipe.pruned, bits, qcfg)
+    ad = pipe.recover_fn(pipe.cfg, qp, ad)
+    return eval_per_task(pipe.cfg, qp, ad)
+
+
+def main(fast: bool = False) -> list[str]:
+    t0 = time.time()
+    steps = 15 if fast else 25
+    variants = {
+        "dtype=nf4": QPrunerConfig(codebook4="nf4"),
+        "dtype=fp4": QPrunerConfig(codebook4="fp4"),
+        "init=loftq": QPrunerConfig(lora=peft.LoraConfig(init="loftq")),
+        "init=gaussian": QPrunerConfig(lora=peft.LoraConfig(init="gaussian")),
+        "init=pissa": QPrunerConfig(lora=peft.LoraConfig(init="pissa")),
+        "loftq_iter=1": QPrunerConfig(lora=peft.LoraConfig(loftq_iters=1)),
+        "loftq_iter=2": QPrunerConfig(lora=peft.LoraConfig(loftq_iters=2)),
+        "loftq_iter=4": QPrunerConfig(lora=peft.LoraConfig(loftq_iters=4)),
+        "importance=element1": QPrunerConfig(importance_order=1),
+        "importance=element2": QPrunerConfig(importance_order=2),
+    }
+    if fast:
+        variants = {k: v for k, v in list(variants.items())[:4]}
+    lines = ["variant," + ",".join(
+        ["boolq", "piqa", "hellaswag", "winogrande", "arc_e", "arc_c", "obqa", "mean"]
+    )]
+    for name, qcfg in variants.items():
+        accs = _run_variant(qcfg, steps)
+        lines.append(name + "," + ",".join(
+            f"{accs[t]:.4f}" for t in
+            ("boolq", "piqa", "hellaswag", "winogrande", "arc_e", "arc_c", "obqa", "mean")
+        ))
+    lines.append(f"# table2 wall time {time.time()-t0:.0f}s")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

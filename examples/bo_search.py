@@ -1,0 +1,86 @@
+"""QPruner³: Bayesian-optimised bit allocation with a Pareto front.
+
+  PYTHONPATH=src python examples/bo_search.py [--iters 8]
+
+Runs the full Algorithm 1: MI initialisation → GP/EI proposals under the
+memory constraint → recovery fine-tune + eval per proposal → Pareto
+front of (accuracy, memory), printed as text art like the paper's Fig 3.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import peft
+from repro.core.bayesopt import pareto_front
+from repro.core.qpruner import QPrunerConfig, QPrunerPipeline
+from repro.data.pipeline import DataConfig, SyntheticInstruct
+from repro.eval import tasks as ev
+from repro.models import model_zoo as zoo
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.trainer import make_qpruner_train_step, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = zoo.get_smoke_config("llama7b_like").with_(n_layers=8, d_ff=512)
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    stream = SyntheticInstruct(DataConfig(cfg.vocab_size, 64, 16, seed=0))
+    step = jax.jit(make_train_step(
+        zoo.train_loss_fn(cfg), OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    ))
+    state = {"params": params, "opt": adamw_init(params)}
+    for _ in range(100):
+        b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        state, _ = step(state, b)
+    params = state["params"]
+
+    qcfg = QPrunerConfig(prune_rate=0.3, bo_iterations=args.iters,
+                         lora=peft.LoraConfig(rank=4))
+    calib = [{k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+             for _ in range(2)]
+
+    def recover(cfg2, qparams, adapters):
+        lf = zoo.train_loss_fn(cfg2)
+        st = jax.jit(make_qpruner_train_step(
+            lambda p, b, a: lf(p, b, adapters=a),
+            OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=15),
+        ))
+        s = {"adapters": adapters, "opt": adamw_init(adapters)}
+        for _ in range(15):
+            b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+            s, _ = st(s, qparams, b)
+        return s["adapters"]
+
+    def evaluate(cfg2, qparams, adapters):
+        return ev.evaluate_all(cfg2, qparams, n=32, adapters=adapters)["mean"]
+
+    pipe = QPrunerPipeline(cfg, params, qcfg, calib, recover, evaluate)
+    pipe.prune()
+    r2 = pipe.run_mi()
+    print(f"b0 (MI): acc={r2['perf']:.3f}  8-bit layers={np.where(r2['bits']==8)[0].tolist()}")
+    res = pipe.run_bo(r2["bits"])
+
+    pts = [(h["perf"], h["mem"]) for h in res.history]
+    front = set(pareto_front(pts))
+    print(f"\n{len(res.history)} evaluations; Pareto front:")
+    mems = np.array([p[1] for p in pts])
+    for i, (perf, mem) in enumerate(pts):
+        bar = "#" * int(40 * (perf - min(p[0] for p in pts) + 1e-9)
+                        / (max(p[0] for p in pts) - min(p[0] for p in pts) + 1e-9))
+        star = " <- PARETO" if i in front else ""
+        print(f"  mem {mem/1e6:7.3f}MB acc {perf:.3f} |{bar:<40s}|{star}")
+    print(f"\nbest: acc={res.best_perf:.3f} mem={res.best_mem/1e6:.3f}MB "
+          f"bits8={np.where(res.best_bits==8)[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300] [--params-m 100]
+
+A llama-family model sized to ~100M params trains on the synthetic LM
+stream with the production trainer (AdamW + cosine, grad accumulation,
+remat, atomic checkpointing with resume). Loss must fall well below the
+unigram entropy — printed every 20 steps with tokens/s.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model_zoo as zoo
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+
+def config_100m():
+    # 12L × d768 × ff2048, vocab 8192 → ≈ 98M params
+    return zoo.get_smoke_config("llama7b_like").with_(
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=2048,
+        vocab_size=8192, q_chunk=64, kv_chunk=64, loss_chunk=64,
+        dtype="float32", remat=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params, {cfg.n_layers}L d{cfg.d_model}")
+
+    opt_cfg = OptimizerConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(zoo.train_loss_fn(cfg), opt_cfg, grad_accum=2))
+    state = {"params": params, "opt": adamw_init(params)}
+    stream = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
+    cm = CheckpointManager("runs/ckpt/train_100m", keep_n=2)
+    start = 0
+    if args.resume and cm.latest_step() is not None:
+        start, state, extra = cm.restore()
+        stream.load_state_dict(extra["data"])
+        print(f"resumed from step {start}")
+
+    t0, first_loss = time.time(), None
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        state, m = step_fn(state, batch)
+        if first_loss is None:
+            first_loss = float(m["loss"])
+        if (i + 1) % 20 == 0:
+            tput = (i + 1 - start) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {i+1:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  {tput:.0f} tok/s")
+        if (i + 1) % 100 == 0:
+            cm.save(i + 1, state, extra={"data": stream.state_dict()})
+    final = float(m["loss"])
+    cm.save(args.steps, state, extra={"data": stream.state_dict()})
+    print(f"loss {first_loss:.3f} → {final:.3f} "
+          f"({'CONVERGING' if final < first_loss - 0.5 else 'check hyperparams'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""One module per assigned architecture; each exposes config() + smoke_config().
+
+``config()`` is the exact public-literature configuration (dry-run only —
+lowered, compiled, never allocated on this host). ``smoke_config()`` is a
+reduced same-family config that runs a real forward/train step on CPU.
+"""

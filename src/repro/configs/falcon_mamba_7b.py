@@ -1,0 +1,31 @@
+"""falcon-mamba-7b  [arXiv:2410.05355] — attention-free Mamba-1.
+
+64L d_model=4096 (attn-free) vocab=65024, d_inner=8192, ssm_state=16,
+dt_rank=256, conv_width=4. RMSNorm. long_500k runs: O(1) state decode.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="falcon_mamba_7b",
+        family="ssm",
+        n_layers=64,
+        d_model=4096,
+        vocab_size=65024,
+        d_inner=8192,
+        ssm_state=16,
+        dt_rank=256,
+        conv_width=4,
+        mlp="none",
+        block_pattern=("mamba",),
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, d_inner=128, ssm_state=4, dt_rank=8,
+        vocab_size=256,
+        q_chunk=16, kv_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

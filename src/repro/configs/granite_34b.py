@@ -1,0 +1,29 @@
+"""granite-34b  [arXiv:2405.04324] — llama-arch code model.
+
+88L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152. Per the
+assignment brackets: llama architecture → RMSNorm, SwiGLU, RoPE, no bias.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="granite_34b",
+        family="dense",
+        n_layers=88,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        d_ff=24576,
+        vocab_size=49152,
+        rope_theta=1e4,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, d_ff=96,
+        vocab_size=256,
+        q_chunk=16, kv_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

@@ -1,0 +1,29 @@
+"""LLaMA-7B-like reference config — the paper's primary subject.
+
+32L d_model=4096 32H (MHA) d_ff=11008 vocab=32000, RMSNorm, SwiGLU,
+RoPE. Used by the QPruner benchmarks (Table 1/2 reproduction at reduced
+scale via smoke_config) and as the paper-representative roofline cell.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama7b_like",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=11008,
+        vocab_size=32000,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=384,
+        vocab_size=512,
+        q_chunk=16, kv_chunk=16, loss_chunk=32, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

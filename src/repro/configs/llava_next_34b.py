@@ -1,0 +1,33 @@
+"""llava-next-34b  [hf:llava-hf family] — VLM backbone (Yi-34B-ish).
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000. The vision tower
+is a STUB: input_specs provides precomputed patch embeddings
+[B, n_patches=2880, 1024] (anyres 4+1 tiles x 576 patches) projected by
+the mm connector. Loss runs over text positions only.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llava_next_34b",
+        family="vlm",
+        n_layers=60,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20480,
+        vocab_size=64000,
+        rope_theta=5e6,
+        n_patches=2880,
+        vis_dim=1024,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256, n_patches=8, vis_dim=16,
+        q_chunk=8, kv_chunk=8, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

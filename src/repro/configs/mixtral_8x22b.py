@@ -1,0 +1,36 @@
+"""mixtral-8x22b  [arXiv:2401.04088].
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, MoE 8 experts
+top-2, sliding-window attention (per assignment brackets; window 4096).
+RMSNorm, SwiGLU experts, RoPE theta 1e6, no bias.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mixtral_8x22b",
+        family="moe",
+        n_layers=56,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab_size=32768,
+        n_experts=8,
+        moe_top_k=2,
+        norm="rms",
+        mlp="swiglu",
+        rope_theta=1e6,
+        sliding_window=4096,
+        block_pattern=("moe",),
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256, n_experts=4, moe_top_k=2, sliding_window=16,
+        q_chunk=16, kv_chunk=16, moe_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

@@ -1,0 +1,35 @@
+"""phi3.5-moe-42b-a6.6b  [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064, MoE 16 experts
+top-2. PhiMoE uses LayerNorm, SwiGLU experts, RoPE, attention bias.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="phi35_moe",
+        family="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=6400,
+        vocab_size=32064,
+        n_experts=16,
+        moe_top_k=2,
+        norm="ln",
+        mlp="swiglu",
+        attn_bias=True,
+        rope_theta=1e4,
+        block_pattern=("moe",),
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256, n_experts=4, moe_top_k=2,
+        q_chunk=16, kv_chunk=16, moe_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

@@ -1,0 +1,30 @@
+"""qwen1.5-32b  [hf:Qwen/Qwen1.5-32B family].
+
+64L d_model=5120 40H (GQA kv=40 — effectively MHA) d_ff=27392
+vocab=152064, QKV bias, RMSNorm, SwiGLU, RoPE.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen15_32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=40,
+        d_ff=27392,
+        vocab_size=152064,
+        attn_bias=True,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+        vocab_size=256,
+        q_chunk=16, kv_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

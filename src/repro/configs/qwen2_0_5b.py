@@ -1,0 +1,31 @@
+"""qwen2-0.5b  [arXiv:2407.10671].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936 — GQA, QKV bias,
+tied embeddings, RMSNorm, SwiGLU, RoPE theta 1e6.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2_0_5b",
+        family="dense",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_ff=4864,
+        vocab_size=151936,
+        attn_bias=True,
+        rope_theta=1e6,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256,
+        q_chunk=16, kv_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

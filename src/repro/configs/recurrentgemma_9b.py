@@ -1,0 +1,36 @@
+"""recurrentgemma-9b  [arXiv:2402.19427] — Griffin hybrid.
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000; block pattern
+(rec, rec, attn) — 2 RG-LRU recurrent blocks per local-attention block
+(window 2048). GeGLU MLP, RMSNorm, RoPE in the attention blocks.
+38 = 12 full periods + 2 trailing recurrent blocks (second scan segment).
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma_9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256000,
+        mlp="geglu",
+        block_pattern=("rec", "rec", "localattn"),
+        lru_width=4096,
+        local_window=2048,
+        conv_width=4,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=96, vocab_size=256, lru_width=64, local_window=16,
+        q_chunk=16, kv_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

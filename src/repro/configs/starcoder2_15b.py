@@ -1,0 +1,32 @@
+"""starcoder2-15b  [arXiv:2402.19173].
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152 — GQA, RoPE,
+LayerNorm, GeLU MLP, biases.
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="starcoder2_15b",
+        family="dense",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=4,
+        d_ff=24576,
+        vocab_size=49152,
+        norm="ln",
+        mlp="gelu",
+        attn_bias=True,
+        rope_theta=1e5,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256,
+        q_chunk=16, kv_chunk=16, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

@@ -1,0 +1,38 @@
+"""whisper-small  [arXiv:2212.04356] — encoder-decoder, stub frontend.
+
+12+12L d_model=768 12H d_ff=3072 vocab=51865. LayerNorm, GeLU, learned
+positions. The conv/audio frontend is a STUB: input_specs provides
+precomputed frame features [B, 1500, 128] projected by one linear.
+max_pos is scaled to 32768 so the assigned decode_32k cell is
+well-defined (documented deviation: real Whisper caps at 448).
+"""
+from repro.models.transformer import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper_small",
+        family="encdec",
+        n_layers=12,
+        n_enc_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        norm="ln",
+        mlp="gelu",
+        pos_embed="learned",
+        max_pos=32768,
+        enc_len=1500,
+        feat_dim=128,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return config().with_(
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=96, vocab_size=256, max_pos=128, enc_len=24, feat_dim=16,
+        q_chunk=8, kv_chunk=8, loss_chunk=16, scan_chunk=16,
+        dtype="float32", remat=False,
+    )

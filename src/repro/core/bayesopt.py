@@ -1,0 +1,258 @@
+"""Constrained Bayesian optimization over bit-width configurations (§3.2).
+
+The paper refines the MI-initialised bit vector with BO (their code uses
+Optuna; offline here, so we implement the GP-BO loop ourselves):
+
+- search space: b ∈ {4, 8}^L with the memory constraint M(b) ≤ M_max
+  (and optionally the ≤25%-8-bit structural constraint);
+- surrogate: Gaussian process on bit vectors. Binary vectors → an RBF
+  kernel over scaled Hamming features is standard and is what we use
+  (k(b, b') = σ² exp(−||b−b'||² / (2ℓ²L)) + σ_n² δ);
+- acquisition: Expected Improvement (default) or UCB, maximised over a
+  candidate pool = random feasible vectors ∪ 1-bit mutations of the
+  incumbents (the discrete analogue of local-search acquisition
+  maximisation);
+- bookkeeping: every evaluated (b, perf, mem) lands in the dataset D and
+  the (perf, −mem) Pareto front is maintained (paper Fig. 3/4).
+
+Pure numpy/scipy on host — the expensive part is the caller's evaluate()
+(a short recovery fine-tune + task eval), exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+from scipy.linalg import cho_factor, cho_solve
+from scipy.stats import norm
+
+__all__ = ["GaussianProcess", "BayesOpt", "BOResult", "pareto_front"]
+
+
+# ---------------------------------------------------------------------------
+# Gaussian process
+# ---------------------------------------------------------------------------
+
+
+class GaussianProcess:
+    """GP regression with an RBF kernel over {0,1}^L features."""
+
+    def __init__(
+        self,
+        lengthscale: float = 0.35,
+        signal_var: float = 1.0,
+        noise_var: float = 1e-4,
+    ):
+        self.lengthscale = lengthscale
+        self.signal_var = signal_var
+        self.noise_var = noise_var
+        self._x: Optional[np.ndarray] = None
+        self._chol = None
+        self._alpha = None
+        self._ymean = 0.0
+        self._ystd = 1.0
+
+    def _k(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        # a: [n, L], b: [m, L] in {0,1}; normalised squared distance
+        L = a.shape[1]
+        d2 = (
+            np.sum(a * a, axis=1)[:, None]
+            + np.sum(b * b, axis=1)[None, :]
+            - 2.0 * a @ b.T
+        ) / L
+        return self.signal_var * np.exp(-d2 / (2.0 * self.lengthscale**2))
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "GaussianProcess":
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        self._ymean = float(np.mean(y))
+        self._ystd = float(np.std(y)) or 1.0
+        yn = (y - self._ymean) / self._ystd
+        k = self._k(x, x) + self.noise_var * np.eye(len(x))
+        self._chol = cho_factor(k, lower=True)
+        self._alpha = cho_solve(self._chol, yn)
+        self._x = x
+        return self
+
+    def predict(self, xq: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        xq = np.asarray(xq, dtype=np.float64)
+        ks = self._k(self._x, xq)  # [n, m]
+        mu = ks.T @ self._alpha
+        v = cho_solve(self._chol, ks)
+        var = np.maximum(
+            self.signal_var - np.sum(ks * v, axis=0), 1e-12
+        )
+        return mu * self._ystd + self._ymean, np.sqrt(var) * self._ystd
+
+
+# ---------------------------------------------------------------------------
+# Pareto utilities (paper Fig. 3/4: perf vs memory)
+# ---------------------------------------------------------------------------
+
+
+def pareto_front(points: Sequence[tuple[float, float]]) -> list[int]:
+    """Indices of non-dominated points; maximise perf (x0), minimise mem (x1)."""
+    idx = sorted(range(len(points)), key=lambda i: (-points[i][0], points[i][1]))
+    front, best_mem = [], np.inf
+    for i in idx:
+        if points[i][1] < best_mem:
+            front.append(i)
+            best_mem = points[i][1]
+    return sorted(front)
+
+
+# ---------------------------------------------------------------------------
+# BO driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BOResult:
+    best_bits: np.ndarray
+    best_perf: float
+    best_mem: float
+    history: list[dict]
+    pareto: list[dict]
+
+
+class BayesOpt:
+    """Algorithm 1 of the paper.
+
+    evaluate(bits) -> (performance, memory_bytes). Higher perf is better.
+    memory_fn(bits) -> bytes (cheap, exact) for constraint filtering
+    before we pay for an evaluation.
+    """
+
+    def __init__(
+        self,
+        n_layers: int,
+        evaluate: Callable[[np.ndarray], tuple[float, float]],
+        memory_fn: Callable[[np.ndarray], float],
+        memory_limit: float,
+        *,
+        max_frac_8bit: float = 1.0,
+        acquisition: str = "ei",
+        ucb_beta: float = 2.0,
+        n_candidates: int = 256,
+        seed: int = 0,
+    ):
+        self.L = n_layers
+        self.evaluate = evaluate
+        self.memory_fn = memory_fn
+        self.memory_limit = memory_limit
+        self.max_frac_8bit = max_frac_8bit
+        self.acquisition = acquisition
+        self.ucb_beta = ucb_beta
+        self.n_candidates = n_candidates
+        self.rng = np.random.default_rng(seed)
+        self.history: list[dict] = []
+        self._seen: set[tuple[int, ...]] = set()
+
+    # -- feasibility ---------------------------------------------------------
+    def feasible(self, bits: np.ndarray) -> bool:
+        if np.mean(bits == 8) > self.max_frac_8bit + 1e-9:
+            return False
+        return self.memory_fn(bits) <= self.memory_limit
+
+    def _random_feasible(self) -> np.ndarray:
+        for _ in range(64):
+            p8 = self.rng.uniform(0.0, self.max_frac_8bit)
+            bits = np.where(self.rng.uniform(size=self.L) < p8, 8, 4).astype(np.int64)
+            if self.feasible(bits):
+                return bits
+        return np.full(self.L, 4, dtype=np.int64)  # all-4-bit is always feasible
+
+    def _mutations(self, bits: np.ndarray) -> list[np.ndarray]:
+        out = []
+        for l in range(self.L):
+            m = bits.copy()
+            m[l] = 4 if m[l] == 8 else 8
+            out.append(m)
+        # a couple of 2-bit swaps to escape plateaus
+        for _ in range(8):
+            m = bits.copy()
+            i, j = self.rng.integers(0, self.L, size=2)
+            m[i], m[j] = (4 if m[i] == 8 else 8), (4 if m[j] == 8 else 8)
+            out.append(m)
+        return out
+
+    # -- acquisition ---------------------------------------------------------
+    def _acq(self, gp: GaussianProcess, cands: np.ndarray, best: float) -> np.ndarray:
+        mu, sd = gp.predict(cands)
+        if self.acquisition == "ucb":
+            return mu + self.ucb_beta * sd
+        z = (mu - best) / np.maximum(sd, 1e-9)
+        return (mu - best) * norm.cdf(z) + sd * norm.pdf(z)
+
+    # -- main loop (Algorithm 1) ----------------------------------------------
+    def record(self, bits: np.ndarray, perf: float, mem: float) -> None:
+        key = tuple(int(b) for b in bits)
+        self._seen.add(key)
+        self.history.append({"bits": bits.copy(), "perf": perf, "mem": mem})
+
+    def run(
+        self,
+        init_bits: Sequence[np.ndarray],
+        n_iterations: int = 20,
+        patience: int = 8,
+    ) -> BOResult:
+        # initial design (b₀ from MI + any extras the caller seeds)
+        for bits in init_bits:
+            bits = np.asarray(bits, dtype=np.int64)
+            if tuple(int(b) for b in bits) in self._seen:
+                continue
+            perf, mem = self.evaluate(bits)
+            self.record(bits, perf, mem)
+
+        stale = 0
+        for _ in range(n_iterations):
+            x = np.stack([(h["bits"] == 8).astype(np.float64) for h in self.history])
+            y = np.array([h["perf"] for h in self.history])
+            gp = GaussianProcess().fit(x, y)
+            best = float(np.max(y))
+
+            pool: list[np.ndarray] = []
+            incumbents = [
+                self.history[i]["bits"]
+                for i in np.argsort(-y)[: min(3, len(y))]
+            ]
+            for inc in incumbents:
+                pool.extend(self._mutations(inc))
+            while len(pool) < self.n_candidates:
+                pool.append(self._random_feasible())
+            cands, keys = [], []
+            for b in pool:
+                k = tuple(int(v) for v in b)
+                if k in self._seen or not self.feasible(b):
+                    continue
+                if k in keys:
+                    continue
+                cands.append(b)
+                keys.append(k)
+            if not cands:
+                break
+            feats = np.stack([(c == 8).astype(np.float64) for c in cands])
+            acq = self._acq(gp, feats, best)
+            chosen = cands[int(np.argmax(acq))]
+
+            perf, mem = self.evaluate(chosen)
+            self.record(chosen, perf, mem)
+            if perf > best + 1e-9:
+                stale = 0
+            else:
+                stale += 1
+                if stale >= patience:
+                    break
+
+        perfs = np.array([h["perf"] for h in self.history])
+        best_i = int(np.argmax(perfs))
+        pts = [(h["perf"], h["mem"]) for h in self.history]
+        front = [self.history[i] for i in pareto_front(pts)]
+        return BOResult(
+            best_bits=self.history[best_i]["bits"],
+            best_perf=float(perfs[best_i]),
+            best_mem=float(self.history[best_i]["mem"]),
+            history=self.history,
+            pareto=front,
+        )

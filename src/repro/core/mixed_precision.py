@@ -1,0 +1,137 @@
+"""Layer-wise bit allocation + the memory model (paper §3.2, Table 1 GB).
+
+Two jobs:
+
+1. :class:`MemoryModel` — exact byte accounting for a (pruned) model
+   under a per-layer bit assignment, plus fine-tune-time overheads
+   (LoRA params/optimizer states, activation estimate). This drives both
+   the paper-style "Memory (GB)" columns and the BO constraint
+   ``M(b) <= M_max``.
+
+2. :func:`allocate_bits` — the MI-proportional initial configuration
+   b₀: rank layers by mutual information, give the top layers 8-bit
+   until the 8-bit budget (paper: "keep the number of 8-bit layers below
+   25%") or the byte budget is exhausted; everything else 4-bit.
+
+A "layer" here is one transformer block (the paper allocates per
+decoder layer, not per matmul); all linears inside a block share the
+block's bit-width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.quantization import QuantConfig
+
+__all__ = ["LayerShapes", "MemoryModel", "allocate_bits", "BitVector"]
+
+BitVector = np.ndarray  # int array [L] with entries in {4, 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShapes:
+    """Quantizable parameter shapes of ONE block (post-pruning)."""
+
+    shapes: tuple[tuple[int, ...], ...]
+
+    def n_params(self) -> int:
+        return int(sum(np.prod(s) for s in self.shapes))
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    """Byte accounting for a model = L blocks + non-block (embed/head) params.
+
+    ``frozen_extra_params``: embeddings, norms, router etc. kept in
+    ``io_dtype_bytes`` precision (paper keeps embeddings fp16).
+    """
+
+    layers: Sequence[LayerShapes]
+    frozen_extra_params: int = 0
+    io_dtype_bytes: int = 2  # bf16
+    lora_rank: int = 8
+    quant_cfg4: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig("nf4", 64, True)
+    )
+    quant_cfg8: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig("int8", 64, True)
+    )
+    optimizer_states_per_param: int = 2  # AdamW m, v
+    optimizer_bytes_per_state: int = 4
+
+    def layer_bytes(self, layer: int, bits: int) -> int:
+        cfg = self.quant_cfg8 if bits == 8 else self.quant_cfg4
+        return int(
+            sum(
+                int(np.prod(s)) * cfg.bytes_per_param()
+                for s in self.layers[layer].shapes
+            )
+        )
+
+    def lora_params(self, layer: int) -> int:
+        """Trainable adapter params for one block: r·(in+out) per matrix."""
+        r = self.lora_rank
+        return int(sum(r * (s[-2] + s[-1]) for s in self.layers[layer].shapes))
+
+    def weight_bytes(self, bits: BitVector) -> int:
+        total = self.frozen_extra_params * self.io_dtype_bytes
+        for l, b in enumerate(bits):
+            total += self.layer_bytes(l, int(b))
+        return total
+
+    def finetune_bytes(self, bits: BitVector) -> int:
+        """Peak fine-tune memory: quantized base + LoRA (+grad+opt states)."""
+        total = self.weight_bytes(bits)
+        for l in range(len(self.layers)):
+            p = self.lora_params(l)
+            total += p * self.io_dtype_bytes  # adapter weights
+            total += p * self.io_dtype_bytes  # adapter grads
+            total += (
+                p * self.optimizer_states_per_param * self.optimizer_bytes_per_state
+            )
+        return total
+
+    def uniform(self, bits: int) -> BitVector:
+        return np.full(len(self.layers), bits, dtype=np.int64)
+
+
+def allocate_bits(
+    mi_scores: np.ndarray,
+    memory_model: MemoryModel,
+    *,
+    max_frac_8bit: float = 0.25,
+    memory_limit_bytes: Optional[int] = None,
+) -> BitVector:
+    """MI-proportional initial allocation b₀ (paper §3.2 / Algorithm 1).
+
+    Start all-4-bit, upgrade layers to 8-bit in descending-MI order while
+    (a) the 8-bit layer fraction stays ≤ ``max_frac_8bit`` and (b) the
+    fine-tune memory stays under ``memory_limit_bytes`` (if given).
+    """
+    L = len(memory_model.layers)
+    if mi_scores.shape != (L,):
+        raise ValueError(f"mi_scores shape {mi_scores.shape} != ({L},)")
+    bits = memory_model.uniform(4)
+    max_upgrades = int(np.floor(max_frac_8bit * L))
+    order = np.argsort(-mi_scores, kind="stable")
+    upgraded = 0
+    for l in order:
+        if upgraded >= max_upgrades:
+            break
+        trial = bits.copy()
+        trial[l] = 8
+        if (
+            memory_limit_bytes is not None
+            and memory_model.finetune_bytes(trial) > memory_limit_bytes
+        ):
+            continue
+        bits = trial
+        upgraded += 1
+    return bits
+
+
+def bits_to_key(bits: BitVector) -> tuple[int, ...]:
+    return tuple(int(b) for b in bits)

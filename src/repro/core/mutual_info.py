@@ -1,0 +1,104 @@
+"""Mutual information between layer outputs and model predictions (Eq. 7).
+
+The paper quantifies a layer's contribution to the target task as
+``I(X; Y)`` where X is the layer's output on representative samples and
+Y is the model's final prediction. Both are continuous/high-dimensional
+in an LLM, so (as is standard) we discretise:
+
+- Y: the argmax prediction (token id / class id) — already discrete;
+- X: random-projection to ``n_proj`` scalars, each quantile-binned into
+  ``n_bins`` levels; MI is computed per projection from the joint
+  histogram and averaged. Random projections preserve relative MI
+  ordering across layers (what the allocation consumes) while keeping
+  the estimator O(N · n_proj).
+
+Everything jnp; jit-friendly for fixed (n_bins, n_proj).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["histogram_mi", "layer_mi_scores"]
+
+
+def _quantile_bin(x: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Bin a 1-D sample vector into quantile bins → int32 bin ids."""
+    qs = jnp.quantile(x, jnp.linspace(0.0, 1.0, n_bins + 1)[1:-1])
+    return jnp.searchsorted(qs, x, side="right").astype(jnp.int32)
+
+
+def _joint_hist_mi(xb: jnp.ndarray, yb: jnp.ndarray, nx: int, ny: int) -> jnp.ndarray:
+    """MI from discrete pairs via the plug-in (histogram) estimator."""
+    n = xb.shape[0]
+    flat = xb * ny + yb
+    joint = jnp.bincount(flat, length=nx * ny).reshape(nx, ny).astype(jnp.float32)
+    pxy = joint / n
+    px = pxy.sum(axis=1, keepdims=True)
+    py = pxy.sum(axis=0, keepdims=True)
+    ratio = jnp.where(pxy > 0, pxy / jnp.maximum(px * py, 1e-12), 1.0)
+    return jnp.sum(jnp.where(pxy > 0, pxy * jnp.log(ratio), 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "n_proj", "n_classes"))
+def histogram_mi(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    n_bins: int = 16,
+    n_proj: int = 8,
+    n_classes: int = 0,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """I(X; Y) estimate. x: [N, D] float activations; y: [N] int labels.
+
+    ``n_classes`` 0 → use max(y)+1 is not jit-safe, so callers pass it;
+    if 0 we re-bin y into ``n_bins`` levels treating it as continuous.
+    """
+    n, d = x.shape
+    key = jax.random.PRNGKey(seed)
+    proj = jax.random.normal(key, (d, n_proj), dtype=jnp.float32) / np.sqrt(d)
+    z = x.astype(jnp.float32) @ proj  # [N, n_proj]
+    if n_classes:
+        yb = jnp.clip(y.astype(jnp.int32), 0, n_classes - 1)
+        ny = n_classes
+    else:
+        yb = _quantile_bin(y.astype(jnp.float32), n_bins)
+        ny = n_bins
+    mis = []
+    for j in range(n_proj):
+        xb = _quantile_bin(z[:, j], n_bins)
+        mis.append(_joint_hist_mi(xb, yb, n_bins, ny))
+    return jnp.mean(jnp.stack(mis))
+
+
+def layer_mi_scores(
+    layer_outputs: dict[int, jnp.ndarray],
+    predictions: jnp.ndarray,
+    *,
+    n_bins: int = 16,
+    n_proj: int = 8,
+    n_classes: int = 0,
+) -> np.ndarray:
+    """MI per layer. layer_outputs[l]: [N, D_l]; predictions: [N] ints.
+
+    Returns np.float64 [L] in layer order — consumed by
+    :mod:`repro.core.mixed_precision`.
+    """
+    L = len(layer_outputs)
+    out = np.zeros(L)
+    for l in range(L):
+        out[l] = float(
+            histogram_mi(
+                layer_outputs[l],
+                predictions,
+                n_bins=n_bins,
+                n_proj=n_proj,
+                n_classes=n_classes,
+                seed=l,
+            )
+        )
+    return out

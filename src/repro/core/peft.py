@@ -1,0 +1,182 @@
+"""Parameter-efficient fine-tuning: LoRA, LoftQ, PiSSA, QLoRA (paper §3.3).
+
+The recovery phase fine-tunes a *frozen* (possibly quantized) base with
+trainable low-rank adapters:
+
+    Y = base(X) + (α/r) · (X A) B,   A ∈ R^{d_in×r}, B ∈ R^{r×d_out}
+
+Initialisations (Table 2 ablation):
+- ``gaussian``: A ~ N(0, 1/r), B = 0 (classic LoRA);
+- ``pissa``:    principal SVD components of W become the adapter, the
+                *residual* W − AB becomes the (quantized) base;
+- ``loftq``:    alternate  Q ← q_N(W − AB);  A,B ← SVD_r(W − deq(Q))
+                for T iterations so Q + AB ≈ W at init (Eq. 10).
+
+All functions handle both unstacked ``[in, out]`` and layer-stacked
+``[L, in, out]`` weights (SVD batches over the leading axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    QTensor,
+    QuantConfig,
+    qtensor_from_dense,
+    qtensor_matmul,
+    qtensor_to_dense,
+)
+
+__all__ = [
+    "LoraConfig",
+    "init_adapter",
+    "loftq_init",
+    "pissa_init",
+    "lora_apply",
+    "merge_adapter",
+    "adapter_param_count",
+]
+
+InitMethod = Literal["gaussian", "loftq", "pissa"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraConfig:
+    rank: int = 8
+    alpha: float = 16.0
+    init: InitMethod = "loftq"
+    loftq_iters: int = 1
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+# ---------------------------------------------------------------------------
+# SVD helpers (batched over optional leading layer axis)
+# ---------------------------------------------------------------------------
+
+
+def _svd_lowrank(w: jnp.ndarray, r: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rank-r factors (A, B) with A B ≈ w. w: [..., in, out] (fp32 SVD)."""
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    sr = jnp.sqrt(s[..., :r])
+    a = u[..., :, :r] * sr[..., None, :]
+    b = sr[..., :, None] * vt[..., :r, :]
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Initialisations
+# ---------------------------------------------------------------------------
+
+
+def gaussian_init(
+    key: jax.Array, shape_in: int, shape_out: int, cfg: LoraConfig, lead: tuple = ()
+) -> dict:
+    a = jax.random.normal(key, (*lead, shape_in, cfg.rank), dtype=jnp.float32)
+    a = (a / jnp.sqrt(cfg.rank)).astype(cfg.dtype)
+    b = jnp.zeros((*lead, cfg.rank, shape_out), dtype=cfg.dtype)
+    return {"a": a, "b": b}
+
+
+def loftq_init(
+    w: jnp.ndarray, qcfg: QuantConfig, cfg: LoraConfig
+) -> tuple[QTensor, dict]:
+    """LoftQ: argmin_{Q,A,B} ||W − (Q + AB)||²  via alternating steps.
+
+    Returns (quantized base Q, adapter {a, b}). ``loftq_iters=1`` is the
+    paper default; Table 2 shows more iterations do not always help.
+    """
+    w32 = w.astype(jnp.float32)
+    ab = jnp.zeros_like(w32)
+    qt = None
+    for _ in range(max(cfg.loftq_iters, 1)):
+        qt = qtensor_from_dense(w32 - ab, qcfg)
+        resid = w32 - qtensor_to_dense(qt, out_dtype=jnp.float32)
+        a, b = _svd_lowrank(resid, cfg.rank)
+        ab = a @ b
+    return qt, {"a": a.astype(cfg.dtype), "b": b.astype(cfg.dtype)}
+
+
+def pissa_init(
+    w: jnp.ndarray, qcfg: Optional[QuantConfig], cfg: LoraConfig
+) -> tuple[QTensor | jnp.ndarray, dict]:
+    """PiSSA: adapter = principal components, base = residual (quantized)."""
+    a, b = _svd_lowrank(w, cfg.rank)
+    resid = w.astype(jnp.float32) - a @ b
+    base = qtensor_from_dense(resid, qcfg) if qcfg is not None else resid.astype(w.dtype)
+    return base, {"a": a.astype(cfg.dtype), "b": b.astype(cfg.dtype)}
+
+
+def init_adapter(
+    key: jax.Array,
+    w: jnp.ndarray,
+    qcfg: Optional[QuantConfig],
+    cfg: LoraConfig,
+) -> tuple[QTensor | jnp.ndarray, dict]:
+    """Dispatch on cfg.init. Returns (base, adapter).
+
+    With ``qcfg=None`` the base stays dense (plain LoRA on fp models —
+    the paper's LLM-Pruner + LoRA baseline); gaussian is then the only
+    meaningful init and loftq/pissa fall back accordingly.
+    """
+    if cfg.init == "gaussian" or qcfg is None and cfg.init == "loftq":
+        base = qtensor_from_dense(w, qcfg) if qcfg is not None else w
+        lead = tuple(w.shape[:-2])
+        return base, gaussian_init(key, w.shape[-2], w.shape[-1], cfg, lead)
+    if cfg.init == "loftq":
+        return loftq_init(w, qcfg, cfg)
+    if cfg.init == "pissa":
+        return pissa_init(w, qcfg, cfg)
+    raise ValueError(f"unknown init {cfg.init!r}")
+
+
+# ---------------------------------------------------------------------------
+# Forward / merge
+# ---------------------------------------------------------------------------
+
+
+def lora_apply(
+    x: jnp.ndarray,
+    base: QTensor | jnp.ndarray,
+    adapter: Optional[Mapping],
+    cfg: LoraConfig,
+    *,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Y = X @ base + scale · (X @ A) @ B with quantized-base dispatch."""
+    if isinstance(base, QTensor):
+        y = qtensor_matmul(x, base, use_kernel=use_kernel)
+    else:
+        y = x @ base.astype(x.dtype)
+    if adapter is not None:
+        a = adapter["a"].astype(x.dtype)
+        b = adapter["b"].astype(x.dtype)
+        y = y + cfg.scale * ((x @ a) @ b)
+    return y
+
+
+def merge_adapter(
+    base: QTensor | jnp.ndarray, adapter: Mapping, cfg: LoraConfig
+) -> jnp.ndarray:
+    """Dense W' = deq(base) + scale·AB (for export / eval-time folding)."""
+    dense = (
+        qtensor_to_dense(base, out_dtype=jnp.float32)
+        if isinstance(base, QTensor)
+        else base.astype(jnp.float32)
+    )
+    ab = adapter["a"].astype(jnp.float32) @ adapter["b"].astype(jnp.float32)
+    return dense + cfg.scale * ab
+
+
+def adapter_param_count(adapters: Mapping) -> int:
+    import numpy as np
+
+    leaves = jax.tree.leaves(adapters)
+    return int(sum(np.prod(l.shape) for l in leaves))

@@ -1,0 +1,302 @@
+"""Structured pruning with dependency groups (paper §3.1, LLM-Pruner style).
+
+A *dependency group* couples every parameter slice that must be removed
+together for the computation graph to stay well-formed: pruning attention
+KV-group ``g`` removes the q-projection columns of the q-heads in that
+group, the k/v-projection columns of the kv head, and the o-projection
+rows of those q-heads; pruning FFN channel ``c`` removes the gate/up
+columns and the down row; pruning a MoE expert removes its three expert
+matrices and its router logit; pruning an SSM channel removes the coupled
+in/gate/conv/out slices.
+
+We express this declaratively: a :class:`GroupSpec` names the group
+dimension (how many prunable groups a layer has) and lists
+:class:`ParamRule` members (which param, which axis, how many elements of
+that axis per group). The model zoo provides specs per architecture
+(``repro.models.model_zoo.prune_specs``) — this module is model-agnostic.
+
+TPU adaptation (see DESIGN.md §3): LLM-Pruner's global ranking yields
+*different widths per layer*, which would break scan-over-layers
+homogeneity and MXU tile alignment. We therefore prune a **uniform count
+per layer with per-layer indices** (ranking is still importance-based
+within each layer, and the per-layer *rate* can differ across group
+specs). A ``global_rank`` mode is provided for unstacked (list-of-layers)
+models used in ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.importance import Agg, aggregate_groups
+
+__all__ = [
+    "ParamRule",
+    "GroupSpec",
+    "PruningPlan",
+    "flatten_params",
+    "unflatten_params",
+    "compute_group_scores",
+    "make_plan",
+    "apply_plan",
+    "pruned_param_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# Param path helpers (params are nested dicts; paths are "a/b/c")
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params: Mapping) -> dict[str, jnp.ndarray]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, Mapping):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else str(k), v)
+        else:
+            flat[prefix] = node
+
+    rec("", params)
+    return flat
+
+
+def unflatten_params(flat: Mapping[str, jnp.ndarray]) -> dict:
+    out: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamRule:
+    """One member of a dependency group.
+
+    ``path``: regex fully matching the flat param path.
+    ``axis``: axis of the *unstacked* param tensor that the group dim
+      lives on. If the param is layer-stacked (leading L axis), the model
+      zoo sets ``stacked=True`` and the effective axis is ``axis + 1``.
+    ``per_group``: elements of that axis per group (e.g. q-heads-per-kv ×
+      head_dim for wq under a KV-group spec).
+    """
+
+    path: str
+    axis: int
+    per_group: int
+    stacked: bool = True
+
+    def eff_axis(self) -> int:
+        return self.axis + (1 if self.stacked else 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """A family of dependency groups within each layer."""
+
+    name: str  # e.g. "kv_groups", "ffn", "experts", "ssm_channels"
+    n_groups: int  # prunable groups per layer
+    rules: tuple[ParamRule, ...]
+    # groups are pruned in multiples of this (MXU/lane alignment):
+    round_to: int = 1
+    # never prune below this many groups:
+    min_groups: int = 1
+
+
+@dataclasses.dataclass
+class PruningPlan:
+    """keep_indices[spec.name] -> int32 [L, n_keep] (sorted per layer)."""
+
+    keep: dict[str, jnp.ndarray]
+    n_layers: int
+    spec_by_name: dict[str, GroupSpec]
+
+    def n_kept(self, name: str) -> int:
+        return int(self.keep[name].shape[-1])
+
+    def rate(self, name: str) -> float:
+        spec = self.spec_by_name[name]
+        return 1.0 - self.n_kept(name) / spec.n_groups
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+# ---------------------------------------------------------------------------
+
+
+def _match_rules(
+    flat: Mapping[str, jnp.ndarray], spec: GroupSpec
+) -> list[tuple[str, ParamRule]]:
+    hits = []
+    for rule in spec.rules:
+        rx = re.compile(rule.path)
+        matched = [p for p in flat if rx.fullmatch(p)]
+        for p in matched:
+            hits.append((p, rule))
+    if not hits:
+        raise ValueError(f"spec {spec.name!r}: no params matched any rule")
+    return hits
+
+
+def compute_group_scores(
+    elem_scores: Mapping,
+    spec: GroupSpec,
+    agg: Agg = "sum",
+) -> jnp.ndarray:
+    """Aggregate element importance into [L, n_groups] scores for a spec.
+
+    Group score = aggregation over every member rule's contribution
+    (paper: the group importance sums the coupled structures' scores).
+    """
+    flat = flatten_params(elem_scores)
+    hits = _match_rules(flat, spec)
+    total = None
+    for path, rule in hits:
+        arr = flat[path]
+        per_layer = aggregate_groups(
+            arr, rule.eff_axis(), spec.n_groups, agg=agg,
+            has_layer_axis=rule.stacked,
+        )
+        if per_layer.ndim == 1:  # unstacked layer — promote to [1, G]
+            per_layer = per_layer[None, :]
+        if agg == "max":
+            total = per_layer if total is None else jnp.maximum(total, per_layer)
+        else:
+            total = per_layer if total is None else total + per_layer
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+
+def _round_keep(n_keep: int, spec: GroupSpec) -> int:
+    n_keep = max(n_keep, spec.min_groups)
+    if spec.round_to > 1:
+        n_keep = int(np.ceil(n_keep / spec.round_to) * spec.round_to)
+    return min(n_keep, spec.n_groups)
+
+
+def make_plan(
+    group_scores: Mapping[str, jnp.ndarray],
+    specs: Sequence[GroupSpec],
+    rate: float,
+    boost_layers: Sequence[int] = (),
+    rates_per_spec: Optional[Mapping[str, float]] = None,
+) -> PruningPlan:
+    """Select the groups to KEEP, per layer, per spec (uniform-count mode).
+
+    ``rate`` is the fraction of groups to remove (paper's 20/30/50%).
+    Every layer keeps the same *count* (scan homogeneity — DESIGN.md §3)
+    but its own top-scoring *indices*. ``boost_layers`` mirrors
+    LLM-Pruner's first/last-layer protection: those layers' scores are
+    scaled up so global-mode ranking (see :func:`make_global_plan`)
+    spares them; in uniform mode it is a no-op recorded for parity.
+    """
+    keep: dict[str, jnp.ndarray] = {}
+    spec_by_name = {s.name: s for s in specs}
+    for spec in specs:
+        scores = np.asarray(group_scores[spec.name])  # [L, G]
+        L, G = scores.shape
+        r = rates_per_spec.get(spec.name, rate) if rates_per_spec else rate
+        n_keep = _round_keep(int(round(G * (1.0 - r))), spec)
+        rows = []
+        for layer in range(L):
+            order = np.argsort(-scores[layer], kind="stable")
+            rows.append(np.sort(order[:n_keep]).astype(np.int32))
+        keep[spec.name] = jnp.asarray(np.stack(rows))
+    return PruningPlan(keep=keep, n_layers=next(iter(keep.values())).shape[0],
+                       spec_by_name=spec_by_name)
+
+
+def make_global_plan(
+    group_scores: Mapping[str, jnp.ndarray],
+    specs: Sequence[GroupSpec],
+    rate: float,
+    protect_layers: Sequence[int] = (),
+) -> dict[str, list[np.ndarray]]:
+    """LLM-Pruner's global ranking: rank all (layer, group) cells together.
+
+    Produces *variable* keep counts per layer — only usable with
+    unstacked list-of-layers models (ablation path); returns plain numpy
+    index lists rather than a stacked PruningPlan.
+    """
+    out: dict[str, list[np.ndarray]] = {}
+    for spec in specs:
+        scores = np.array(group_scores[spec.name], copy=True)  # [L, G]
+        L, G = scores.shape
+        for l in protect_layers:
+            scores[l] = np.inf  # never pruned
+        n_remove = int(round(L * G * rate))
+        flat_order = np.argsort(scores, axis=None, kind="stable")
+        removed = set(flat_order[:n_remove].tolist())
+        rows = []
+        for layer in range(L):
+            kept = [g for g in range(G) if layer * G + g not in removed]
+            # enforce min_groups
+            if len(kept) < spec.min_groups:
+                order = np.argsort(-scores[layer], kind="stable")
+                kept = sorted(order[: spec.min_groups].tolist())
+            rows.append(np.asarray(kept, dtype=np.int32))
+        out[spec.name] = rows
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan application — materialise the smaller model
+# ---------------------------------------------------------------------------
+
+
+def _take_groups(
+    arr: jnp.ndarray, keep: jnp.ndarray, rule: ParamRule, n_groups: int
+) -> jnp.ndarray:
+    """Gather kept groups along the rule's axis. keep: [L, n_keep]."""
+    ax = rule.eff_axis() if rule.stacked else rule.axis
+    size = arr.shape[ax]
+    if size % n_groups != 0:
+        raise ValueError(
+            f"axis {ax} size {size} not divisible by n_groups {n_groups}"
+        )
+    per = size // n_groups  # rule.per_group is documentation; trust the tensor
+    x = jnp.moveaxis(arr, ax, 1 if rule.stacked else 0)
+    if rule.stacked:
+        L = x.shape[0]
+        x = x.reshape(L, n_groups, per, *x.shape[2:])
+        idx = keep  # [L, n_keep]
+        gathered = jax.vmap(lambda xl, il: jnp.take(xl, il, axis=0))(x, idx)
+        gathered = gathered.reshape(L, keep.shape[1] * per, *x.shape[3:])
+        return jnp.moveaxis(gathered, 1, ax)
+    else:
+        x = x.reshape(n_groups, per, *x.shape[1:])
+        gathered = jnp.take(x, keep[0], axis=0)
+        gathered = gathered.reshape(keep.shape[1] * per, *x.shape[2:])
+        return jnp.moveaxis(gathered, 0, ax)
+
+
+def apply_plan(params: Mapping, plan: PruningPlan, specs: Sequence[GroupSpec]) -> dict:
+    """Materialise the pruned parameter pytree (smaller dense tensors)."""
+    flat = dict(flatten_params(params))
+    for spec in specs:
+        keep = plan.keep[spec.name]
+        for path, rule in _match_rules(flat, spec):
+            flat[path] = _take_groups(flat[path], keep, rule, spec.n_groups)
+    return unflatten_params(flat)
+
+
+def pruned_param_count(params: Mapping) -> int:
+    return sum(int(np.prod(v.shape)) for v in flatten_params(params).values())

@@ -1,0 +1,393 @@
+"""QPruner end-to-end orchestration (the paper's Figure 2 pipeline).
+
+    prune (LLM-Pruner groups + Taylor importance)
+      → quantize (uniform 4-bit = QPruner¹
+                  | MI-allocated mixed precision = QPruner²
+                  | + Bayesian-optimised allocation = QPruner³)
+      → LoftQ-initialised LoRA recovery fine-tune
+      → zero-shot evaluation (7-task suite)
+
+Each stage is a standalone function over (config, params, data); the
+:class:`QPrunerPipeline` strings them together and is what the
+benchmarks, the examples and ``launch/bo_search.py`` drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import peft
+from repro.core.bayesopt import BayesOpt, BOResult
+from repro.core.importance import Agg, estimate_importance
+from repro.core.mixed_precision import LayerShapes, MemoryModel, allocate_bits
+from repro.core.mutual_info import layer_mi_scores
+from repro.core.pruning import (
+    GroupSpec,
+    PruningPlan,
+    apply_plan,
+    compute_group_scores,
+    flatten_params,
+    make_plan,
+    pruned_param_count,
+    unflatten_params,
+)
+from repro.core.quantization import QTensor, QuantConfig, qtensor_from_dense
+from repro.models import model_zoo as zoo
+from repro.models import transformer as tf
+
+__all__ = ["QPrunerConfig", "QPrunerPipeline", "quantize_blocks", "collect_layer_outputs"]
+
+
+@dataclasses.dataclass
+class QPrunerConfig:
+    prune_rate: float = 0.2
+    importance_order: int = 1  # Element¹ (paper's best, Table 2)
+    importance_agg: Agg = "sum"
+    codebook4: str = "nf4"
+    codebook8: str = "int8"
+    quant_block: int = 64
+    double_quant: bool = True
+    max_frac_8bit: float = 0.25  # paper: ≤25% of layers at 8-bit
+    lora: peft.LoraConfig = dataclasses.field(default_factory=peft.LoraConfig)
+    recover_steps: int = 30
+    bo_iterations: int = 10
+    memory_limit_bytes: Optional[int] = None
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: structured pruning
+# ---------------------------------------------------------------------------
+
+
+def prune_model(cfg, params, batches, qcfg: QPrunerConfig):
+    """→ (pruned_params, pruned_cfg, plan). batches: calibration iterator."""
+    loss_fn = zoo.train_loss_fn(cfg)
+    est = estimate_importance(
+        lambda p, b: loss_fn(p, b), params, batches, order=qcfg.importance_order
+    )
+    specs = zoo.prune_specs(cfg)
+    scores = {s.name: compute_group_scores(est.scores, s, agg=qcfg.importance_agg) for s in specs}
+    plan = make_plan(scores, specs, qcfg.prune_rate)
+    pruned = apply_plan(params, plan, specs)
+    new_cfg = _shrink_config(cfg, plan)
+    return pruned, new_cfg, plan
+
+
+def _shrink_config(cfg, plan: PruningPlan):
+    kw = {}
+    for name, keep in plan.keep.items():
+        spec = plan.spec_by_name[name]
+        n_keep = keep.shape[-1]
+        if name == "kv_groups":
+            ratio = n_keep / spec.n_groups
+            kw["n_kv_heads"] = n_keep
+            kw["n_heads"] = int(cfg.n_heads * ratio)
+        elif name == "q_heads":
+            kw["n_heads"] = n_keep
+        elif name in ("ffn", "expert_ffn"):
+            kw["d_ff"] = n_keep
+        elif name == "experts":
+            kw["n_experts"] = n_keep
+        elif name == "ssm_channels":
+            kw["d_inner"] = n_keep
+        elif name == "lru_channels":
+            kw["lru_width"] = n_keep
+    kw["head_dim"] = cfg.hd  # pruning heads must not change head_dim
+    return cfg.with_(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: quantization (per-block-layer bit widths) + LoftQ adapters
+# ---------------------------------------------------------------------------
+
+_QUANTIZABLE = re.compile(
+    r".*/(wq|wk|wv|wo|w_gate|w_up|w_down|e_gate|e_up|e_down|in_proj_x|in_proj_z|"
+    r"out_proj|dt_proj|x_proj|w_in|w_out)$"
+)
+
+
+def _leaf_layer_ids(cfg, path: str, n_stacked: int) -> np.ndarray:
+    """Global layer indices covered by a stacked leaf (seg/pos aware).
+
+    seg si scans n periods of its pattern; position pi within the pattern
+    covers global layers offset_si + period·P + pi.
+    """
+    m = re.search(r"seg(\d+)/p(\d+)_", path)
+    if not m:
+        return np.zeros(n_stacked, np.int64)
+    si, pi = int(m.group(1)), int(m.group(2))
+    segs = tf.segments_of(cfg)
+    offset = sum(len(pat) * n for pat, n in segs[:si])
+    P = len(segs[si][0])
+    return offset + np.arange(n_stacked) * P + pi
+
+
+def _fake_quant(w: jnp.ndarray, codebook: str, qcfg: QPrunerConfig) -> jnp.ndarray:
+    """Simulated quantization q_N(W) (paper §2.1): quantize-dequantize."""
+    from repro.core.quantization import qtensor_to_dense
+
+    qc = QuantConfig(codebook, qcfg.quant_block, qcfg.double_quant)
+    return qtensor_to_dense(qtensor_from_dense(w, qc), out_dtype=w.dtype)
+
+
+def _fake_quant_mixed(w: jnp.ndarray, bits_vec: np.ndarray, qcfg: QPrunerConfig):
+    """Per-layer simulated quantization of a stacked [n, in, out] weight.
+
+    bits_vec[l] ∈ {4, 8, 16} selects the codebook per stacked index; 16
+    keeps the layer dense. Scan homogeneity is preserved because the
+    result stays one dense stack — storage cost is accounted exactly by
+    the MemoryModel (the deployed artifact stores true packed QTensors;
+    simulated quantization is numerically identical, paper §2.1).
+    """
+    n = w.shape[0]
+    bits_vec = np.resize(bits_vec, n)
+    q4 = _fake_quant(w, qcfg.codebook4, qcfg)
+    q8 = _fake_quant(w, qcfg.codebook8, qcfg)
+    sel = jnp.asarray(bits_vec).reshape((n,) + (1,) * (w.ndim - 1))
+    out = jnp.where(sel >= 16, w, jnp.where(sel >= 8, q8, q4))
+    return out.astype(w.dtype)
+
+
+def quantize_blocks(
+    cfg,
+    params,
+    bits_per_layer: np.ndarray,  # [n_layers] ∈ {4, 8, 16}; 16 = keep dense
+    qcfg: QPrunerConfig,
+    *,
+    init_adapters: bool = True,
+    loftq_iters: Optional[int] = None,
+):
+    """Per-layer mixed-precision quantization + LoftQ adapter init.
+
+    Every quantizable stacked weight is replaced by its *simulated
+    quantization* at the per-layer bit width (dense storage at runtime;
+    exact byte accounting in MemoryModel — the export path stores packed
+    QTensors via repro.kernels.ops.quantize_weights). LoftQ alternates
+    Q ← q(W − AB); A,B ← SVD_r(W − Q) per layer, batched over the stack.
+
+    Returns (qparams, adapters, mem_bytes).
+    """
+    flat = flatten_params(params)
+    qflat, aflat = {}, {}
+    key = jax.random.PRNGKey(qcfg.seed)
+    mem = 0
+    iters = qcfg.lora.loftq_iters if loftq_iters is None else loftq_iters
+    for path, w in flat.items():
+        if not _QUANTIZABLE.match(path) or w.ndim < 2:
+            qflat[path] = w
+            mem += w.size * w.dtype.itemsize
+            continue
+        n_stacked = w.shape[0] if w.ndim >= 3 else 1
+        bits_arr = np.asarray(bits_per_layer)
+        lids = np.clip(_leaf_layer_ids(cfg, path, n_stacked), 0, len(bits_arr) - 1)
+        bits_vec = bits_arr[lids]
+        if w.ndim == 2:
+            w = w[None]
+            squeeze = True
+        else:
+            squeeze = False
+        w32 = w.astype(jnp.float32)
+        key, sub = jax.random.split(key)
+        if init_adapters and qcfg.lora.init == "loftq":
+            ab = jnp.zeros_like(w32)
+            for _ in range(max(iters, 1)):
+                q = _fake_quant_mixed(w32 - ab, bits_vec, qcfg)
+                a, b = peft._svd_lowrank(w32 - q, qcfg.lora.rank)
+                ab = a @ b
+            ad = {"a": a.astype(qcfg.lora.dtype), "b": b.astype(qcfg.lora.dtype)}
+        elif init_adapters and qcfg.lora.init == "pissa":
+            a, b = peft._svd_lowrank(w32, qcfg.lora.rank)
+            q = _fake_quant_mixed(w32 - a @ b, bits_vec, qcfg)
+            ad = {"a": a.astype(qcfg.lora.dtype), "b": b.astype(qcfg.lora.dtype)}
+        elif init_adapters:  # gaussian
+            q = _fake_quant_mixed(w32, bits_vec, qcfg)
+            lead = tuple(w.shape[:-2])
+            ad = peft.gaussian_init(sub, w.shape[-2], w.shape[-1], qcfg.lora, lead)
+        else:
+            q = _fake_quant_mixed(w32, bits_vec, qcfg)
+            ad = None
+        q = q.astype(flat[path].dtype)
+        if squeeze:
+            q = q[0]
+            if ad is not None:
+                ad = {k: v[0] for k, v in ad.items()}
+        qflat[path] = q
+        if ad is not None:
+            aflat[path] = ad
+        # exact storage accounting per layer
+        per_layer_elems = int(np.prod(w.shape[1:]))
+        for b_l in bits_vec:
+            if b_l >= 16:
+                mem += per_layer_elems * 2
+            else:
+                qc = QuantConfig(
+                    qcfg.codebook8 if b_l >= 8 else qcfg.codebook4,
+                    qcfg.quant_block, qcfg.double_quant,
+                )
+                mem += int(per_layer_elems * qc.bytes_per_param())
+    qparams = unflatten_params(qflat)
+    adapters = unflatten_params(aflat) if aflat else None
+    return qparams, adapters, mem
+
+
+def quantize_per_layer_bits(
+    cfg, params, bits_per_layer: np.ndarray, qcfg: QPrunerConfig
+):
+    """Exact per-layer mixed precision: split each stacked leaf into the
+    4-bit and 8-bit sub-stacks (two scan segments of widths n4/n8 would
+    be needed to *execute* them; this function is the memory/bench path
+    that the MemoryModel and BO search consume)."""
+    flat = flatten_params(params)
+    total = 0
+    for path, w in flat.items():
+        if not _QUANTIZABLE.match(path) or w.ndim < 3:
+            total += w.size * w.dtype.itemsize
+            continue
+        n = w.shape[0]
+        for l in range(n):
+            b = int(bits_per_layer[min(l, len(bits_per_layer) - 1)])
+            if b >= 16:
+                total += w[l].size * w.dtype.itemsize
+            else:
+                qc = QuantConfig(
+                    qcfg.codebook8 if b == 8 else qcfg.codebook4,
+                    qcfg.quant_block, qcfg.double_quant,
+                )
+                total += int(w[l].size * qc.bytes_per_param())
+    return total
+
+
+# ---------------------------------------------------------------------------
+# MI scores over real layer outputs
+# ---------------------------------------------------------------------------
+
+
+def collect_layer_outputs(cfg, params, tokens: jnp.ndarray) -> dict[int, jnp.ndarray]:
+    """Run the model capturing each block's output (mean-pooled) per sample."""
+    outputs: dict[int, jnp.ndarray] = {}
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    ctx = {"positions": jnp.arange(tokens.shape[1]), "q_offset": 0}
+    li = 0
+    for si, (pattern, n) in enumerate(tf.segments_of(cfg)):
+        seg = params[f"seg{si}"]
+        for period in range(n):
+            for pi, kind in enumerate(pattern):
+                p_sl = jax.tree.map(lambda a: a[period], seg[f"p{pi}_{kind}"])
+                x, _ = tf._KIND[kind]["apply"](cfg, p_sl, x, ctx, None)
+                outputs[li] = jnp.mean(x, axis=1)  # [B, d] per-sample summary
+                li += 1
+    return outputs
+
+
+def mi_bit_allocation(cfg, params, tokens, qcfg: QPrunerConfig) -> tuple[np.ndarray, np.ndarray]:
+    """→ (mi_scores [L], b0 [L]) — Algorithm 1's initialisation."""
+    outs = collect_layer_outputs(cfg, params, tokens)
+    hidden, _ = tf.forward_hidden(cfg, params, tokens)
+    logits = tf.lm_logits(cfg, params, hidden[:, -1])
+    preds = jnp.argmax(logits, axis=-1)
+    # bucket predictions into classes for the discrete MI estimator
+    mi = layer_mi_scores(outs, preds % 64, n_classes=64)
+    mm = memory_model_of(cfg, qcfg)
+    b0 = allocate_bits(
+        mi, mm, max_frac_8bit=qcfg.max_frac_8bit,
+        memory_limit_bytes=qcfg.memory_limit_bytes,
+    )
+    return mi, b0
+
+
+def memory_model_of(cfg, qcfg: QPrunerConfig) -> MemoryModel:
+    """Exact per-block quantizable shapes → MemoryModel."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    shapes = [(d, cfg.n_heads * hd), (d, cfg.n_kv_heads * hd),
+              (d, cfg.n_kv_heads * hd), (cfg.n_heads * hd, d)]
+    if cfg.n_experts:
+        shapes += [(cfg.n_experts * d, f), (cfg.n_experts * d, f), (cfg.n_experts * f, d)]
+    elif cfg.mlp in ("swiglu", "geglu"):
+        shapes += [(d, f), (d, f), (f, d)]
+    elif cfg.mlp == "gelu":
+        shapes += [(d, f), (f, d)]
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        shapes = [(d, di), (d, di), (di, cfg.dt_rank + 2 * cfg.ssm_state),
+                  (cfg.dt_rank, di), (di, d)]
+    layers = [LayerShapes(tuple(shapes)) for _ in range(cfg.n_layers)]
+    extra = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    return MemoryModel(
+        layers, frozen_extra_params=extra, lora_rank=qcfg.lora.rank,
+        quant_cfg4=QuantConfig(qcfg.codebook4, qcfg.quant_block, qcfg.double_quant),
+        quant_cfg8=QuantConfig(qcfg.codebook8, qcfg.quant_block, qcfg.double_quant),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage 3+4: recovery fine-tune + eval, and the full pipeline
+# ---------------------------------------------------------------------------
+
+
+class QPrunerPipeline:
+    """Drives QPruner^{1,2,3} end to end on a (small) model.
+
+    evaluate_fn(params, adapters) -> float — task performance (higher
+    better); recover_fn(qparams, adapters) -> adapters — fine-tune hook.
+    Both default to the synthetic suite / LoRA trainer used by the
+    benchmarks.
+    """
+
+    def __init__(self, cfg, params, qcfg: QPrunerConfig,
+                 calib_batches, recover_fn, evaluate_fn):
+        self.cfg0 = cfg
+        self.params0 = params
+        self.qcfg = qcfg
+        self.calib = list(calib_batches)
+        self.recover_fn = recover_fn
+        self.evaluate_fn = evaluate_fn
+        self.pruned = None
+        self.cfg = None
+
+    # stage 1
+    def prune(self):
+        self.pruned, self.cfg, self.plan = prune_model(
+            self.cfg0, self.params0, self.calib, self.qcfg
+        )
+        return self
+
+    def _eval_bits(self, bits: np.ndarray) -> tuple[float, float]:
+        qparams, adapters, _ = quantize_blocks(self.cfg, self.pruned, bits, self.qcfg)
+        adapters = self.recover_fn(self.cfg, qparams, adapters)
+        perf = self.evaluate_fn(self.cfg, qparams, adapters)
+        mem = float(memory_model_of(self.cfg, self.qcfg).finetune_bytes(bits))
+        return perf, mem
+
+    # QPruner¹: uniform 4-bit
+    def run_uniform(self) -> dict:
+        mm = memory_model_of(self.cfg, self.qcfg)
+        bits = mm.uniform(4)
+        perf, mem = self._eval_bits(bits)
+        return {"variant": "qpruner1", "bits": bits, "perf": perf, "mem": mem}
+
+    # QPruner²: MI-based mixed precision
+    def run_mi(self) -> dict:
+        tokens = jnp.asarray(self.calib[0]["tokens"])
+        self.mi, b0 = mi_bit_allocation(self.cfg, self.pruned, tokens, self.qcfg)
+        perf, mem = self._eval_bits(b0)
+        return {"variant": "qpruner2", "bits": b0, "perf": perf, "mem": mem, "mi": self.mi}
+
+    # QPruner³: + Bayesian optimisation
+    def run_bo(self, b0: np.ndarray) -> BOResult:
+        mm = memory_model_of(self.cfg, self.qcfg)
+        limit = self.qcfg.memory_limit_bytes or mm.finetune_bytes(mm.uniform(8))
+        bo = BayesOpt(
+            n_layers=self.cfg.n_layers,
+            evaluate=lambda b: self._eval_bits(b),
+            memory_fn=lambda b: float(mm.finetune_bytes(b)),
+            memory_limit=float(limit),
+            max_frac_8bit=self.qcfg.max_frac_8bit,
+            seed=self.qcfg.seed,
+        )
+        return bo.run([b0, mm.uniform(4)], n_iterations=self.qcfg.bo_iterations)

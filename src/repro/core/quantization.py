@@ -1,0 +1,462 @@
+"""Quantization core for QPruner.
+
+Implements the paper's quantization substrate (§2.1):
+
+- codebook quantization ``X_int = round((2^N - 1) F(X))`` with uniform,
+  NF4 (normal-float, QLoRA), FP4 (e2m1) and int codebooks;
+- block-wise absmax scaling (weights are chunked into ``block`` contiguous
+  elements along the input dim; each block carries one scale);
+- 4-bit packing (two codes per uint8) and 2-bit packing (four codes per
+  uint8) so storage matches the claimed memory model;
+- double quantization of scales (QLoRA §3: quantize the fp32 absmax
+  scales to int8 with one second-level fp32 scale per 256 blocks);
+- ``QTensor`` — a registered pytree node carrying codes + scales +
+  static metadata. It flows through jit / pjit / scan / grad and is the
+  storage format every quantized layer uses.
+
+Dequantization follows Eq. (2)-(3): a lookup table ``T[i] = F^{-1}(i/(2^N-1))``
+maps codes back to simulated high precision ("simulated quantization for
+matrices": codes are stored packed and expanded to bf16/f32 tiles inside
+the matmul — on TPU this happens inside the Pallas kernel in VMEM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CODEBOOKS",
+    "QuantConfig",
+    "QTensor",
+    "make_codebook",
+    "quantize",
+    "dequantize",
+    "quantize_blockwise",
+    "dequantize_blockwise",
+    "pack_codes",
+    "unpack_codes",
+    "qtensor_from_dense",
+    "qtensor_to_dense",
+    "qtensor_matmul",
+    "quant_bytes",
+    "dense_bytes",
+]
+
+# ---------------------------------------------------------------------------
+# Codebooks
+# ---------------------------------------------------------------------------
+
+
+def _nf4_codebook() -> np.ndarray:
+    """The 16-entry NormalFloat-4 codebook from QLoRA (Dettmers et al. 2023).
+
+    Values are the exact constants used by bitsandbytes; they are the
+    quantiles of N(0,1) normalised to [-1, 1] with 0 exactly representable.
+    """
+    return np.array(
+        [
+            -1.0,
+            -0.6961928009986877,
+            -0.5250730514526367,
+            -0.39491748809814453,
+            -0.28444138169288635,
+            -0.18477343022823334,
+            -0.09105003625154495,
+            0.0,
+            0.07958029955625534,
+            0.16093020141124725,
+            0.24611230194568634,
+            0.33791524171829224,
+            0.44070982933044434,
+            0.5626170039176941,
+            0.7229568362236023,
+            1.0,
+        ],
+        dtype=np.float32,
+    )
+
+
+def _fp4_codebook() -> np.ndarray:
+    """FP4 (e2m1) codebook as used by bitsandbytes, normalised to [-1, 1].
+
+    bnb's fp4 values: {0, ±0.0625, ±0.125, ±0.25, ±0.333, ±0.5, ±0.666, ±1}.
+    """
+    pos = np.array([0.0, 0.0625, 0.125, 0.25, 1.0 / 3.0, 0.5, 2.0 / 3.0, 1.0])
+    return np.sort(np.concatenate([-pos[1:], pos])).astype(np.float32)
+
+
+def _uniform_codebook(bits: int) -> np.ndarray:
+    """Symmetric uniform codebook on [-1, 1] with 2^bits entries."""
+    n = 2**bits
+    return np.linspace(-1.0, 1.0, n).astype(np.float32)
+
+
+def _int_codebook(bits: int) -> np.ndarray:
+    """Integer codebook: {-(2^{b-1}-1) .. 2^{b-1}-1}/ (2^{b-1}-1), symmetric.
+
+    (int8 absmax quantization as in LLM.int8(): code i maps to
+    (i - zero)/ (2^{b-1}-1); we store the normalised table so all
+    codebooks share the dequant path.)
+    """
+    qmax = 2 ** (bits - 1) - 1
+    vals = np.arange(-qmax, qmax + 1, dtype=np.float32) / qmax
+    # pad to 2^bits entries by repeating the minimum (code 0 == -1.0 twice)
+    pad = 2**bits - vals.shape[0]
+    return np.concatenate([vals[:1]] * pad + [vals]).astype(np.float32)
+
+
+CODEBOOKS: dict[str, np.ndarray] = {
+    "nf4": _nf4_codebook(),
+    "fp4": _fp4_codebook(),
+    "int8": _int_codebook(8),
+    "int4": _int_codebook(4),
+    "int2": _int_codebook(2),
+    "uniform4": _uniform_codebook(4),
+    "uniform8": _uniform_codebook(8),
+}
+
+_BITS: dict[str, int] = {
+    "nf4": 4,
+    "fp4": 4,
+    "int8": 8,
+    "int4": 4,
+    "int2": 2,
+    "uniform4": 4,
+    "uniform8": 8,
+}
+
+
+def make_codebook(name: str) -> jnp.ndarray:
+    if name not in CODEBOOKS:
+        raise ValueError(f"unknown codebook {name!r}; have {sorted(CODEBOOKS)}")
+    return jnp.asarray(CODEBOOKS[name])
+
+
+def codebook_bits(name: str) -> int:
+    return _BITS[name]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static description of a quantization scheme for one tensor."""
+
+    codebook: str = "nf4"  # key into CODEBOOKS
+    block: int = 64  # elements per absmax block (along flattened input dim)
+    double_quant: bool = True  # quantize the scales themselves (QLoRA DQ)
+    dq_block: int = 256  # blocks per second-level scale
+    dtype: jnp.dtype = jnp.bfloat16  # dequantized compute dtype
+
+    @property
+    def bits(self) -> int:
+        return _BITS[self.codebook]
+
+    def bytes_per_param(self) -> float:
+        """Storage bytes per parameter element (codes + scales [+ dq])."""
+        code = self.bits / 8.0
+        if self.double_quant:
+            # int8 scale per block + fp32 second-level scale & fp32 offset
+            scale = (1.0 + 8.0 / self.dq_block) / self.block
+        else:
+            scale = 4.0 / self.block
+        return code + scale
+
+
+# ---------------------------------------------------------------------------
+# Flat (reference) quantize / dequantize, Eq. (1)-(3)
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-codebook-entry assignment for values already scaled to [-1,1].
+
+    Returns uint8 codes. The codebook must be sorted ascending. We use
+    midpoint bucketing (equivalent to nearest neighbour for sorted books),
+    which lowers to a handful of vector compares — the same trick the
+    Pallas kernel uses in-register.
+    """
+    mids = (codebook[1:] + codebook[:-1]) / 2.0
+    return jnp.searchsorted(mids, x, side="right").astype(jnp.uint8)
+
+
+def dequantize(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Lookup-table dequantization, Eq. (3): ``X_D = T[X_int]``."""
+    return jnp.take(codebook, codes.astype(jnp.int32), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Block-wise absmax quantization
+# ---------------------------------------------------------------------------
+
+
+def _blocked(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Reshape to (*lead, n_blocks, block).
+
+    The *matrix* part (last two axes for ndim>=2, last axis for 1-D) is
+    flattened and blocked per leading index — so layer-stacked weights
+    ``[L, in, out]`` quantize to per-layer scales ``[L, nb]`` and remain
+    sliceable by ``lax.scan`` over the leading axis.
+    """
+    lead = x.shape[:-2] if x.ndim >= 2 else ()
+    mat = int(np.prod(x.shape[len(lead):]))
+    if mat % block != 0:
+        raise ValueError(f"matrix size {mat} not divisible by block {block}")
+    return x.reshape(*lead, mat // block, block)
+
+
+def quantize_blockwise(
+    x: jnp.ndarray, cfg: QuantConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-wise absmax quantization.
+
+    Returns ``(codes[uint8, same shape as x], scales[f32, (*lead, nb)])``.
+    Codes are *unpacked* (one per element); see :func:`pack_codes`.
+    """
+    book = make_codebook(cfg.codebook)
+    blocks = _blocked(x.astype(jnp.float32), cfg.block)
+    scales = jnp.max(jnp.abs(blocks), axis=-1)
+    safe = jnp.where(scales == 0, 1.0, scales)
+    normed = blocks / safe[..., None]
+    codes = quantize(normed, book)
+    return codes.reshape(x.shape), scales
+
+
+def dequantize_blockwise(
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    cfg: QuantConfig,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jnp.ndarray:
+    book = make_codebook(cfg.codebook)
+    blocked = _blocked(codes, cfg.block)
+    vals = dequantize(blocked, book)
+    out = vals * scales[..., None].astype(vals.dtype)
+    return out.reshape(codes.shape).astype(out_dtype or cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packing: 4-bit → 2 codes / byte, 2-bit → 4 codes / byte
+# ---------------------------------------------------------------------------
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack uint8 codes (< 2^bits) into dense uint8 storage.
+
+    Packing is along the LAST axis, which must be divisible by 8/bits.
+    bits=8 is the identity.
+    """
+    if bits == 8:
+        return codes
+    per = 8 // bits
+    if codes.shape[-1] % per != 0:
+        raise ValueError(f"last dim {codes.shape[-1]} not divisible by {per}")
+    shaped = codes.reshape(*codes.shape[:-1], codes.shape[-1] // per, per)
+    out = jnp.zeros(shaped.shape[:-1], dtype=jnp.uint8)
+    for i in range(per):
+        out = out | (shaped[..., i].astype(jnp.uint8) << (bits * i))
+    return out
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, last_dim: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`."""
+    if bits == 8:
+        return packed
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    parts = [
+        ((packed >> (bits * i)) & mask).astype(jnp.uint8) for i in range(per)
+    ]
+    out = jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], packed.shape[-1] * per)
+    return out[..., :last_dim]
+
+
+# ---------------------------------------------------------------------------
+# Double quantization of scales (QLoRA)
+# ---------------------------------------------------------------------------
+
+
+def double_quantize_scales(
+    scales: jnp.ndarray, dq_block: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize fp32 absmax scales to int8 + per-dq_block fp32 scale/offset.
+
+    Operates on the LAST axis (leading axes = stacked layers). Scales are
+    positive; we subtract the per-group mean (offset) then absmax-int8
+    the residual, exactly as QLoRA's double quantization. The last axis
+    must be divisible by dq_block (callers guarantee it; weight matrices
+    here are block-multiples by construction).
+    Returns (q_scales[int8, same shape], dq_scale[f32, (*lead, G)],
+    dq_offset[f32, (*lead, G)]).
+    """
+    nb = scales.shape[-1]
+    if nb % dq_block != 0:
+        # fall back to a single group covering the ragged tail
+        dq_block = nb
+    lead = scales.shape[:-1]
+    groups = scales.reshape(*lead, nb // dq_block, dq_block)
+    offset = jnp.mean(groups, axis=-1)
+    resid = groups - offset[..., None]
+    amax = jnp.max(jnp.abs(resid), axis=-1)
+    safe = jnp.where(amax == 0, 1.0, amax)
+    q = jnp.round(resid / safe[..., None] * 127.0).astype(jnp.int8)
+    return q.reshape(scales.shape), safe, offset
+
+
+def double_dequantize_scales(
+    q_scales: jnp.ndarray,
+    dq_scale: jnp.ndarray,
+    dq_offset: jnp.ndarray,
+) -> jnp.ndarray:
+    lead = q_scales.shape[:-1]
+    g = dq_scale.shape[-1]
+    groups = q_scales.reshape(*lead, g, -1).astype(jnp.float32)
+    vals = groups / 127.0 * dq_scale[..., None] + dq_offset[..., None]
+    return vals.reshape(q_scales.shape)
+
+
+# ---------------------------------------------------------------------------
+# QTensor
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Quantized tensor: packed codes + block scales + static metadata.
+
+    The logical (dequantized) tensor has ``shape``/``dtype``. Codes are
+    packed along the last axis. ``scales`` has one entry per ``block``
+    contiguous elements of the *flattened* logical tensor, reshaped to
+    ``(nblocks,)`` (or double-quantized to int8 + second-level arrays).
+
+    Registered as a pytree so it passes through jit/scan/pjit; the array
+    leaves are (codes, scales, dq_scale, dq_offset), everything else is
+    static aux data (hashable → safe for jit static args).
+    """
+
+    codes: jnp.ndarray  # uint8, packed
+    scales: jnp.ndarray  # f32 (or int8 if double_quant)
+    dq_scale: Optional[jnp.ndarray]  # f32 per dq_block, or None
+    dq_offset: Optional[jnp.ndarray]  # f32 per dq_block, or None
+    shape: tuple[int, ...]  # logical shape
+    cfg: QuantConfig
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        leaves = (self.codes, self.scales, self.dq_scale, self.dq_offset)
+        aux = (self.shape, self.cfg)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        codes, scales, dq_scale, dq_offset = leaves
+        shape, cfg = aux
+        return cls(codes, scales, dq_scale, dq_offset, shape, cfg)
+
+    # -- conveniences --------------------------------------------------------
+    @property
+    def bits(self) -> int:
+        return self.cfg.bits
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def logical_dtype(self):
+        return self.cfg.dtype
+
+    def nbytes(self) -> int:
+        total = self.codes.size * self.codes.dtype.itemsize
+        total += self.scales.size * self.scales.dtype.itemsize
+        if self.dq_scale is not None:
+            total += self.dq_scale.size * self.dq_scale.dtype.itemsize
+            total += self.dq_offset.size * self.dq_offset.dtype.itemsize
+        return int(total)
+
+    def resolved_scales(self) -> jnp.ndarray:
+        """fp32 per-block scales regardless of double quantization."""
+        if self.dq_scale is None:
+            return self.scales
+        return double_dequantize_scales(self.scales, self.dq_scale, self.dq_offset)
+
+
+def qtensor_from_dense(w: jnp.ndarray, cfg: QuantConfig) -> QTensor:
+    """Quantize a dense tensor into QTensor storage (the q_N(·) operator)."""
+    codes, scales = quantize_blockwise(w, cfg)
+    packed = pack_codes(codes, cfg.bits)
+    if cfg.double_quant:
+        q, dq_s, dq_o = double_quantize_scales(scales, cfg.dq_block)
+        return QTensor(packed, q, dq_s, dq_o, tuple(w.shape), cfg)
+    return QTensor(packed, scales, None, None, tuple(w.shape), cfg)
+
+
+def qtensor_to_dense(qt: QTensor, out_dtype=None) -> jnp.ndarray:
+    """Full dequantization X_D = T[X_int] * scale (reference path).
+
+    Robust to lax.scan slicing of stacked QTensors: only the (stable)
+    last-axis logical size is read from metadata; every other dim comes
+    from the live code/scale arrays.
+    """
+    codes = unpack_codes(qt.codes, qt.bits, qt.shape[-1])
+    scales = qt.resolved_scales()
+    return dequantize_blockwise(codes, scales, qt.cfg, out_dtype=out_dtype)
+
+
+def qtensor_matmul(
+    x: jnp.ndarray, qt: QTensor, *, use_kernel: bool = False
+) -> jnp.ndarray:
+    """``x @ W`` where W is a QTensor of logical shape (in, out).
+
+    ``use_kernel=True`` routes to the Pallas fused dequant-matmul (TPU
+    target; interpret mode on CPU). The default jnp path is the oracle —
+    XLA fuses the gather+scale into the matmul prologue already.
+    """
+    if use_kernel:
+        from repro.kernels import ops as _kops
+
+        return _kops.qmatmul(x, qt)
+    w = qtensor_to_dense(qt, out_dtype=x.dtype)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (drives the paper's GB columns + the BO constraint)
+# ---------------------------------------------------------------------------
+
+
+def quant_bytes(shape: Sequence[int], cfg: QuantConfig) -> int:
+    """Exact storage bytes for a tensor of ``shape`` under ``cfg``."""
+    n = int(np.prod(shape))
+    nblocks = n // cfg.block
+    code_bytes = n * cfg.bits // 8
+    if cfg.double_quant:
+        groups = -(-nblocks // cfg.dq_block)
+        scale_bytes = nblocks * 1 + groups * 8
+    else:
+        scale_bytes = nblocks * 4
+    return code_bytes + scale_bytes
+
+
+def dense_bytes(shape: Sequence[int], dtype=jnp.bfloat16) -> int:
+    return int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Simulated-quantization error helper (used by LoftQ and tests)
+# ---------------------------------------------------------------------------
+
+
+def quantization_error(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """||W - q_N(W)||_F — the residual LoftQ fits with low-rank factors."""
+    qt = qtensor_from_dense(w, cfg)
+    return jnp.linalg.norm(w - qtensor_to_dense(qt, out_dtype=jnp.float32))

@@ -1,0 +1,108 @@
+"""Gradient compression for the cross-pod (DCN) hop, with error feedback.
+
+Two schemes, both shard_map-native (they wrap the *explicit* cross-pod
+all-reduce; the intra-pod reduction stays full-precision in GSPMD):
+
+- :func:`int8_allreduce` — per-tensor absmax int8 quantize → psum int32 →
+  dequantize; the quantization residual is fed back next step (EF-SGD),
+  so the compression error is compensated rather than accumulated.
+- :func:`powersgd_allreduce` — rank-r factorisation (Vogels et al. 2019):
+  P = M Q̂, psum(P), orthonormalise, Q = Mᵀ P̂, psum(Q), M̂ = P̂ Q̂ᵀ.
+  2·r·(m+n) bytes on the wire instead of m·n; error feedback likewise.
+
+Both take/return a (grads, error_state) pair of pytrees. 1-D leaves
+(norm scales, biases) are psum'd uncompressed — they are noise-sized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_allreduce", "powersgd_allreduce", "init_error_state", "init_powersgd_state"]
+
+
+def init_error_state(grads) -> dict:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _psum(x, axis_name):
+    return jax.lax.psum(x, axis_name)
+
+
+def int8_allreduce(grads, err, axis_name: str):
+    """Error-feedback int8 compressed psum over ``axis_name``."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        if g.ndim < 1 or g.size < 1024:  # tiny tensors: full precision
+            return _psum(g, axis_name), jnp.zeros_like(g)
+        # negotiate ONE scale across the group (pmax) — per-device scales
+        # cannot be recombined after an integer psum
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+        scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * scale  # error feedback
+        total = _psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+        return total * scale, new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(tree, [o[0] for o in out]),
+        jax.tree.unflatten(tree, [o[1] for o in out]),
+    )
+
+
+def _orthonormalize(p):
+    """Gram-Schmidt via QR (small r — cheap)."""
+    q, _ = jnp.linalg.qr(p)
+    return q
+
+
+def init_powersgd_state(grads, rank: int = 4, seed: int = 0) -> dict:
+    """Q factors + error buffers per ≥2-D leaf."""
+
+    def one(path, g):
+        if g.ndim < 2:
+            return None
+        n = g.shape[-1]
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), hash(path) % (2**31))
+        return jax.random.normal(key, (n, rank), jnp.float32)
+
+    flat = jax.tree_util.tree_flatten_with_path(grads)
+    qs = {jax.tree_util.keystr(k): one(jax.tree_util.keystr(k), v) for k, v in flat[0]}
+    return {"q": qs, "err": init_error_state(grads)}
+
+
+def powersgd_allreduce(grads, state: dict, axis_name: str, rank: int = 4):
+    """Rank-r compressed psum with error feedback. Returns (grads, state)."""
+    flat, tree = jax.tree_util.tree_flatten_with_path(grads)
+    errs = jax.tree.leaves(state["err"])
+    new_g, new_e, new_q = [], [], {}
+    for (path, g), e in zip(flat, errs):
+        key = jax.tree_util.keystr(path)
+        q_prev = state["q"].get(key)
+        g32 = g.astype(jnp.float32) + e
+        if g32.ndim < 2 or q_prev is None:
+            new_g.append(_psum(g32, axis_name))
+            new_e.append(jnp.zeros_like(g32))
+            new_q[key] = q_prev
+            continue
+        m2 = g32.reshape(-1, g32.shape[-1])  # [m, n]
+        p = _psum(m2 @ q_prev, axis_name)  # [m, r]
+        p_hat = _orthonormalize(p)
+        q = _psum(m2.T @ p_hat, axis_name)  # [n, r]
+        approx = (p_hat @ q.T).reshape(g32.shape)
+        n_dev = jax.lax.psum(jnp.ones(()), axis_name)
+        # psum'd approx already sums contributions; local error vs own share
+        new_g.append(approx)
+        new_e.append(g32 - approx / n_dev)
+        new_q[key] = q
+    return (
+        jax.tree_util.tree_unflatten(tree, new_g),
+        {"q": new_q, "err": jax.tree_util.tree_unflatten(tree, new_e)},
+    )

@@ -1,0 +1,200 @@
+"""Logical-axis → mesh sharding (MaxText-style rules, divisibility-safe).
+
+Every model exposes a logical-axes pytree mirroring its params (e.g.
+``wq: ('layers', 'embed', 'heads')``). ``RULES`` maps each logical name
+to an ordered preference of mesh axes; :func:`build_sharding` resolves a
+concrete ``NamedSharding`` per leaf with two safety passes:
+
+1. **divisibility** — a dim is only sharded if its size divides evenly
+   over the chosen mesh axes (this is what lets qwen2's 14 heads,
+   whisper's 51865 vocab and mixtral's 8 experts fall back to
+   replication instead of GSPMD padding);
+2. **uniqueness** — a mesh axis is used at most once per leaf (first
+   logical dim that claims it wins; later dims fall back / replicate).
+
+QTensor leaves expand to shardings for (codes, scales, dq_scale,
+dq_offset): codes inherit the logical spec (checked against the packed
+last dim); per-block scale vectors shard only on the leading stacked
+axis.
+
+The default ruleset is FSDP ('embed' over the data axes) + TP (heads /
+mlp / vocab / experts / inner / lru over 'model') + DP (batch over
+pod×data) + sequence-sharded decode caches ('seq' over 'model').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.quantization import QTensor
+
+__all__ = ["RULES", "ShardingRules", "build_sharding", "spec_for", "batch_spec"]
+
+
+# logical axis → ordered mesh-axis preference. Each entry is a tuple of
+# mesh axes to shard over *jointly* (PartitionSpec tuple element).
+DEFAULT_RULES: dict[Optional[str], tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),  # FSDP weight sharding
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),
+    "lru": ("model",),
+    "seq": ("model",),  # decode caches: sequence-sharded attention
+    "seq_act": (),  # train/prefill activation seq dim; 'model' = Megatron-SP
+    "feat": (),
+    "layers": (),
+    None: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Mapping[Optional[str], tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    def with_overrides(self, **kw) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(kw)
+        return ShardingRules(merged)
+
+
+RULES = ShardingRules()
+
+
+def _axes_in_mesh(mesh: Mesh, axes: Sequence[str]) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: ShardingRules = RULES,
+) -> P:
+    """Resolve one leaf's PartitionSpec with divisibility + uniqueness."""
+    if len(logical) != len(shape):
+        raise ValueError(f"logical {logical} rank != shape {tuple(shape)}")
+    used: set[str] = set()
+    parts: list[Any] = []
+    for dim, name in zip(shape, logical):
+        cand = _axes_in_mesh(mesh, rules.rules.get(name, ()))
+        cand = tuple(a for a in cand if a not in used)
+        size = int(np.prod([mesh.shape[a] for a in cand])) if cand else 1
+        if cand and dim % size == 0:
+            parts.append(cand if len(cand) > 1 else cand[0])
+            used.update(cand)
+        else:
+            # try single-axis prefixes before giving up (e.g. batch=16 on
+            # a (pod=2, data=16) mesh shards over 'data' alone)
+            placed = False
+            for a in cand:
+                if dim % mesh.shape[a] == 0:
+                    parts.append(a)
+                    used.add(a)
+                    placed = True
+                    break
+            if not placed:
+                parts.append(None)
+    return P(*parts)
+
+
+def _qtensor_sharding(qt_shape, qt, logical, mesh, rules):
+    """Shardings for the 4 QTensor leaves given the logical weight axes."""
+    lead = logical[:-2]
+    codes_spec = spec_for(qt.codes.shape, logical, mesh, rules)
+    scale_logical = tuple(lead) + (None,)
+    scales_spec = spec_for(qt.scales.shape, scale_logical, mesh, rules)
+    if qt.dq_scale is not None:
+        dq_s = spec_for(qt.dq_scale.shape, scale_logical, mesh, rules)
+        dq_o = spec_for(qt.dq_offset.shape, scale_logical, mesh, rules)
+    else:
+        dq_s = dq_o = None
+    return QTensor(
+        NamedSharding(mesh, codes_spec),
+        NamedSharding(mesh, scales_spec),
+        NamedSharding(mesh, dq_s) if dq_s is not None else None,
+        NamedSharding(mesh, dq_o) if dq_o is not None else None,
+        qt.shape,
+        qt.cfg,
+    )
+
+
+def build_sharding(
+    tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: ShardingRules = RULES,
+) -> Any:
+    """NamedSharding pytree for ``tree`` (arrays / SDS / QTensor leaves).
+
+    ``axes_tree`` mirrors ``tree``'s dict structure with logical-axis
+    tuples at (logical) leaf positions.
+    """
+
+    def rec(node, axes):
+        if isinstance(node, QTensor):
+            return _qtensor_sharding(node.shape, node, tuple(axes), mesh, rules)
+        if isinstance(node, Mapping):
+            return {k: rec(node[k], axes[k]) for k in node}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(n, a) for n, a in zip(node, axes))
+        # array-like leaf
+        shape = node.shape
+        return NamedSharding(mesh, spec_for(shape, tuple(axes), mesh, rules))
+
+    return rec(tree, axes_tree)
+
+
+def batch_spec(mesh: Mesh, rules: ShardingRules = RULES) -> P:
+    axes = _axes_in_mesh(mesh, rules.rules["batch"])
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# In-model activation constraints (ambient-mesh aware)
+# ---------------------------------------------------------------------------
+
+_ACT_RULES: Optional[ShardingRules] = None  # process-wide override hook
+
+
+def set_activation_rules(rules: Optional[ShardingRules]) -> None:
+    """Override the rules :func:`constrain` uses (perf experiments)."""
+    global _ACT_RULES
+    _ACT_RULES = rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    from jax._src.mesh import thread_resources
+
+    m = thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def constrain(x, *logical: Optional[str]):
+    """``with_sharding_constraint`` by logical axis names, no-op off-mesh.
+
+    Model code calls e.g. ``constrain(h, 'batch', None, None)`` after the
+    embedding gather and at block boundaries — GSPMD propagation through
+    gathers/reshapes otherwise silently replicates activations (observed:
+    a replicated [B,S,D] at the embed output inflated per-device temp
+    ~16× on the qwen2 train cell).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    rules = _ACT_RULES or RULES
+    spec = spec_for(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,69 @@
+"""W8A16 dequant-matmul Pallas kernel.
+
+int8 codes decode arithmetically — ``val = (c − 128)/127 · scale`` (the
+symmetric absmax codebook of repro.core.quantization) — no table needed,
+so the VPU does one subtract+multiply per weight before the MXU dot.
+Same layout contract as nf4_matmul but codes are unpacked (1 B/weight).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BK = 256
+DEFAULT_BN = 256
+
+
+def _kernel(x_ref, codes_ref, scales_ref, out_ref, *, block):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]  # [bk, bn] u8
+    w = (codes.astype(jnp.float32) - 128.0) * (1.0 / 127.0)
+    bk, bn = w.shape
+    scales = scales_ref[...]
+    w = (w.reshape(bk, bn // block, block) * scales[..., None]).reshape(bk, bn)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "bm", "bk", "bn", "interpret")
+)
+def int8_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    block: int = 64,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = x.shape
+    N = codes.shape[1]
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    if M % bm or K % bk or N % bn or bn % block:
+        raise ValueError(f"tile misalignment: M{M}/{bm} K{K}/{bk} N{N}/{bn}")
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scales)
+    return out.astype(x.dtype)

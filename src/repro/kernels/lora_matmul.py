@@ -1,0 +1,105 @@
+"""Fused quantized-base + LoRA matmul Pallas kernel.
+
+QPruner's serving/recovery hot path is ``y = x·deq(Q) + α/r·(x·A)·B``.
+Running it as two matmuls reads x from HBM twice and materialises x·A;
+this kernel fuses both: per (m, n) tile it accumulates the dequantised
+base product over K while accumulating ``x·A`` into a VMEM scratch
+([bm, r] fp32, r ≤ 64), then folds ``(x·A)·B`` into the output on the
+last K step. One pass over x and codes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BK = 256
+DEFAULT_BN = 256
+
+
+def _kernel(
+    x_ref, codes_ref, scales_ref, a_ref, b_ref, out_ref, xa_ref,
+    *, book, block, n_k, lora_scale,
+):
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    packed = codes_ref[...]
+    low = packed & 0xF
+    high = packed >> 4
+    codes = jnp.stack([low, high], axis=-1).reshape(packed.shape[0], -1)
+    from repro.kernels.nf4_matmul import _decode4
+    w = _decode4(codes, book)
+    bk, bn = w.shape
+    scales = scales_ref[...]
+    w = (w.reshape(bk, bn // block, block) * scales[..., None]).reshape(bk, bn)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # low-rank accumulation shares the streamed x tile
+    xa_ref[...] += jnp.dot(
+        x, a_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _fold():
+        out_ref[...] += lora_scale * jnp.dot(
+            xa_ref[...], b_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codebook", "block", "lora_scale", "bm", "bk", "bn", "interpret"),
+)
+def lora_qmatmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    a: jnp.ndarray,  # [K, r]
+    b: jnp.ndarray,  # [r, N]
+    *,
+    codebook: tuple,
+    block: int = 64,
+    lora_scale: float = 2.0,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = x.shape
+    N = codes.shape[1] * 2
+    r = a.shape[1]
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    if M % bm or K % bk or N % bn or bn % block:
+        raise ValueError("tile misalignment")
+    book = tuple(float(v) for v in codebook)  # static — unrolled in-kernel
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, book=book, block=block, n_k=grid[2], lora_scale=lora_scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // block), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scales, a, b)
+    return out.astype(x.dtype)

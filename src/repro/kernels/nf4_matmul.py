@@ -1,0 +1,99 @@
+"""Fused NF4/FP4 dequant-matmul Pallas kernel (TPU target).
+
+The TPU adaptation of BitsandBytes' CUDA dequant kernels (DESIGN.md §3):
+packed 4-bit codes stream HBM→VMEM at 0.5 B/weight; codes expand to fp32
+in-register via a 16-way select (one-hot × codebook — TPU VPU-friendly;
+there is no warp-shuffle LUT on TPU), per-block absmax scales apply, and
+the 128-aligned tile feeds the MXU. K is the innermost grid axis; the
+fp32 accumulator lives in the output block across K steps.
+
+Layout contract (matches repro.core.quantization.QTensor):
+  x       [M, K]   bf16/f32
+  codes   [K, N/2] uint8 — two codes/byte along N, low nibble first
+  scales  [K, N/B] f32   — absmax per B consecutive weights of a row
+  out     [M, N]   x.dtype
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BK = 256
+DEFAULT_BN = 256
+
+
+def _decode4(codes_u8: jnp.ndarray, book: tuple) -> jnp.ndarray:
+    """uint8 nibbles [bk, bn] → fp32 via a static 16-way select chain.
+
+    ``book`` is a static python tuple, so this unrolls to 16 vector
+    compare+FMA ops — no gather, no captured array constant (Pallas
+    kernels may not close over device arrays).
+    """
+    w = jnp.zeros(codes_u8.shape, jnp.float32)
+    for i, v in enumerate(book):
+        w += jnp.where(codes_u8 == np.uint8(i), np.float32(v), np.float32(0.0))
+    return w
+
+
+def _kernel(x_ref, codes_ref, scales_ref, out_ref, *, book, block, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    packed = codes_ref[...]  # [bk, bn/2] u8
+    low = packed & 0xF
+    high = packed >> 4
+    codes = jnp.stack([low, high], axis=-1).reshape(packed.shape[0], -1)  # [bk, bn]
+    w = _decode4(codes, book)  # f32
+    bk, bn = w.shape
+    scales = scales_ref[...]  # [bk, bn/block]
+    w = (w.reshape(bk, bn // block, block) * scales[..., None]).reshape(bk, bn)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "codebook", "bm", "bk", "bn", "interpret"),
+)
+def nf4_matmul(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    codebook: tuple,  # static tuple of 16 floats (nf4 / fp4 / ...)
+    block: int = 64,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = x.shape
+    N = codes.shape[1] * 2
+    bm = min(bm, M)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    if M % bm or K % bk or N % bn or bn % block:
+        raise ValueError(f"tile misalignment: M{M}/{bm} K{K}/{bk} N{N}/{bn} block{block}")
+    book = tuple(float(v) for v in codebook)  # static — unrolled in-kernel
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, book=book, block=block, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scales)
+    return out.astype(x.dtype)

@@ -1,0 +1,98 @@
+"""Jit'd wrappers dispatching QTensor ops to the Pallas kernels.
+
+``qmatmul(x, qt)`` is what ``repro.core.quantization.qtensor_matmul``
+routes to with ``use_kernel=True`` (the TPU path). On CPU hosts the
+kernels run in interpret mode — numerically identical, Python-speed —
+so tests exercise the exact kernel body.
+
+Tile-size misalignment (ragged M, tiny shapes) falls back to the jnp
+oracle; production shapes are 128-aligned by construction (the pruner
+rounds kept groups to 128 lanes — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import CODEBOOKS, QTensor
+from repro.kernels import ref as _ref
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.lora_matmul import lora_qmatmul
+from repro.kernels.nf4_matmul import nf4_matmul
+from repro.kernels.quantize import quantize4
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _book_tuple(name: str) -> tuple:
+    return tuple(float(v) for v in CODEBOOKS[name])
+
+
+def _flatten_x(x):
+    K = x.shape[-1]
+    lead = x.shape[:-1]
+    M = int(np.prod(lead)) if lead else 1
+    return x.reshape(M, K), lead
+
+
+def _aligned(M, K, N, bm=256, bk=256, bn=256):
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    return M % bm == 0 and K % bk == 0 and N % bn == 0 and bn % 64 == 0
+
+
+def qmatmul(x: jnp.ndarray, qt: QTensor) -> jnp.ndarray:
+    """x [..., K] @ deq(qt) [K, N] via the fused kernel (oracle fallback)."""
+    if qt.ndim != 2:
+        from repro.core.quantization import qtensor_to_dense
+
+        return x @ qtensor_to_dense(qt, out_dtype=x.dtype)
+    K, N = qt.shape
+    x2, lead = _flatten_x(x)
+    M = x2.shape[0]
+    scales = qt.resolved_scales().reshape(K, -1)
+    if qt.bits == 4 and _aligned(M, K, N):
+        y = nf4_matmul(
+            x2, qt.codes, scales,
+            codebook=_book_tuple(qt.cfg.codebook),
+            block=qt.cfg.block, interpret=_INTERPRET,
+        )
+    elif qt.bits == 8 and _aligned(M, K, N):
+        y = int8_matmul(x2, qt.codes, scales, block=qt.cfg.block, interpret=_INTERPRET)
+    else:  # ragged: jnp oracle (numerically identical)
+        if qt.bits == 4:
+            y = _ref.qmatmul4_ref(
+                x2, qt.codes, scales, CODEBOOKS[qt.cfg.codebook], qt.cfg.block
+            )
+        else:
+            y = _ref.qmatmul8_ref(x2, qt.codes, scales, qt.cfg.block)
+    return y.reshape(*lead, N).astype(x.dtype)
+
+
+def lora_matmul(x, qt: QTensor, a, b, lora_scale: float = 2.0) -> jnp.ndarray:
+    """Fused base+adapter matmul; falls back to qmatmul + dense lora."""
+    K, N = qt.shape
+    x2, lead = _flatten_x(x)
+    M = x2.shape[0]
+    scales = qt.resolved_scales().reshape(K, -1)
+    if qt.bits == 4 and _aligned(M, K, N) and a.shape[1] <= 128:
+        y = lora_qmatmul(
+            x2, qt.codes, scales, a, b,
+            codebook=_book_tuple(qt.cfg.codebook),
+            block=qt.cfg.block, lora_scale=lora_scale, interpret=_INTERPRET,
+        )
+    else:
+        y = qmatmul(x2, qt).astype(jnp.float32) + lora_scale * (
+            (x2.astype(jnp.float32) @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+        )
+    return y.reshape(*lead, N).astype(x.dtype)
+
+
+def quantize_weights(w: jnp.ndarray, codebook: str = "nf4", block: int = 64):
+    """Kernel-backed blockwise 4-bit quantization of a 2-D weight."""
+    K, N = w.shape
+    if K % min(256, K) == 0 and N % min(512, N) == 0 and min(512, N) % block == 0:
+        return quantize4(
+            w, codebook=_book_tuple(codebook), block=block, interpret=_INTERPRET
+        )
+    return _ref.quantize4_ref(w, CODEBOOKS[codebook], block)

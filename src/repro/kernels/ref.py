@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+All references operate on the same storage layout the kernels consume:
+- ``codes``: packed uint8, two 4-bit codes per byte along the LAST axis
+  (low nibble = even element), or raw uint8 for 8-bit;
+- ``scales``: fp32 absmax per ``block`` consecutive elements of the
+  row-major weight matrix, shaped [K, N // block];
+- ``codebook``: 16-entry (4-bit) fp32 table, or arithmetic (int8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import CODEBOOKS
+
+
+def unpack4(packed: jnp.ndarray) -> jnp.ndarray:
+    """[..., N/2] uint8 → [..., N] uint8 (low nibble first)."""
+    low = packed & 0xF
+    high = packed >> 4
+    return jnp.stack([low, high], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def dequant4_ref(codes_packed, scales, codebook, block: int, out_dtype=jnp.float32):
+    """codes [K, N/2] u8, scales [K, N/block] f32 → W [K, N]."""
+    idx = unpack4(codes_packed).astype(jnp.int32)  # [K, N]
+    vals = jnp.take(jnp.asarray(codebook), idx, axis=0)
+    K, N = vals.shape
+    vals = vals.reshape(K, N // block, block) * scales[..., None]
+    return vals.reshape(K, N).astype(out_dtype)
+
+
+def dequant8_ref(codes, scales, block: int, out_dtype=jnp.float32):
+    """int8-coded weights: val = (c − 128)/127 · scale (see quantization.py)."""
+    vals = (codes.astype(jnp.float32) - 128.0) / 127.0
+    K, N = vals.shape
+    vals = vals.reshape(K, N // block, block) * scales[..., None]
+    return vals.reshape(K, N).astype(out_dtype)
+
+
+def qmatmul4_ref(x, codes_packed, scales, codebook, block: int):
+    """x [M, K] @ deq(codes) [K, N] in fp32."""
+    w = dequant4_ref(codes_packed, scales, codebook, block)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def qmatmul8_ref(x, codes, scales, block: int):
+    w = dequant8_ref(codes, scales, block)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def lora_qmatmul4_ref(x, codes_packed, scales, codebook, block, a, b, lora_scale):
+    base = qmatmul4_ref(x, codes_packed, scales, codebook, block)
+    lo = (x.astype(jnp.float32) @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return (base.astype(jnp.float32) + lora_scale * lo).astype(x.dtype)
+
+
+def quantize4_ref(w, codebook, block: int):
+    """W [K, N] → (codes [K, N/2] u8 packed, scales [K, N/block] f32).
+
+    Matches repro.core.quantization.quantize_blockwise + pack_codes for a
+    2-D row-major weight whose K·N blocks align with rows (N % block == 0).
+    """
+    K, N = w.shape
+    book = jnp.asarray(codebook)
+    blocks = w.astype(jnp.float32).reshape(K, N // block, block)
+    scales = jnp.max(jnp.abs(blocks), axis=-1)
+    safe = jnp.where(scales == 0, 1.0, scales)
+    normed = (blocks / safe[..., None]).reshape(K, N)
+    mids = (book[1:] + book[:-1]) / 2.0
+    codes = jnp.searchsorted(mids, normed, side="right").astype(jnp.uint8)
+    pairs = codes.reshape(K, N // 2, 2)
+    packed = (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+    return packed, scales

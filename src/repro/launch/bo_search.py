@@ -1,0 +1,13 @@
+"""Launcher shim: the BO search driver lives in examples/bo_search.py.
+
+  PYTHONPATH=src python -m repro.launch.bo_search [--iters 8]
+"""
+import runpy
+import sys
+from pathlib import Path
+
+if __name__ == "__main__":
+    runpy.run_path(
+        str(Path(__file__).resolve().parents[3] / "examples" / "bo_search.py"),
+        run_name="__main__",
+    )

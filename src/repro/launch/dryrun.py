@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the
+# device count at first init). Everything below is normal code.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build abstract (ShapeDtypeStruct) params/inputs, resolve
+shardings from the logical-axis rules, ``jax.jit(...).lower().compile()``
+against the production mesh, and record:
+
+- ``compiled.memory_analysis()``  (per-device bytes — proves it fits)
+- ``compiled.cost_analysis()``    (HLO FLOPs / bytes for the roofline)
+- collective bytes parsed from the compiled HLO text per collective kind
+
+Results append to a JSONL consumed by ``benchmarks/roofline.py`` and
+EXPERIMENTS.md. Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama7b_like --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--out runs/dryrun.jsonl]
+"""
+__doc__ = _DOC
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import RULES, build_sharding, spec_for
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.xla_cost import collective_cost, jaxpr_cost
+from repro.models import model_zoo as zoo
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)\[([\d,]*)\]")
+_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _hlo_collective_bytes(hlo: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in HLO text."""
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for line in hlo.splitlines():
+        s = line.lstrip()
+        # match "op = TYPE[SHAPE]{...} collective-kind(" and tuple results
+        for kind in COLLECTIVES:
+            if f" {kind}(" in s or f"= {kind}(" in s or s.startswith(kind + "("):
+                lhs = s.split("=", 1)[0] + "=" + s.split("=", 1)[1].split(kind)[0] if "=" in s else s
+                for m in _SHAPE_RE.finditer(lhs):
+                    dt, dims = m.groups()
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    out[kind] += n * _BYTES[dt]
+                break
+    return out
+
+
+def _abstract_params(cfg):
+    init = zoo.init_fn(cfg)
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init(cfg, k), key)
+
+
+def build_cell(arch: str, shape: str, mesh, *, rules=RULES):
+    """Returns (fn, args, in_shardings, out_shardings, meta) for one cell."""
+    cfg = zoo.get_config(arch)
+    cell = zoo.SHAPES[shape]
+    params = _abstract_params(cfg)
+    axes = zoo.axes_fn(cfg)(cfg)
+    p_shard = build_sharding(params, axes, mesh, rules)
+
+    def ispec(x, logical):
+        return jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, spec_for(s.shape, logical[: len(s.shape)], mesh, rules)),
+            x,
+        )
+
+    if cell.kind == "train":
+        loss_fn = zoo.train_loss_fn(cfg)
+        opt = jax.eval_shape(adamw_init, params)
+        opt_shard = {
+            "m": p_shard,
+            "v": p_shard,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        state = {"params": params, "opt": opt}
+        state_shard = {"params": p_shard, "opt": opt_shard}
+        # microbatch grad accumulation: bounds activation/remat memory to
+        # O(batch/accum) per step. Target ONE sequence row per device per
+        # microbatch: accum = batch / dp (dp = pod×data). A non-divisible
+        # microbatch silently replicates activations (observed 2.4× on
+        # the multi-pod whisper cell at fixed accum=16).
+        dp = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+        accum = max(1, min(16, cell.global_batch // dp))
+        step = make_train_step(loss_fn, OptimizerConfig(), grad_accum=accum)
+        batch = zoo.input_specs(cfg, shape)["batch"]
+        b_shard = {
+            k: jax.sharding.NamedSharding(
+                mesh, spec_for(v.shape, ("batch",) + (None,) * (len(v.shape) - 1), mesh, rules)
+            )
+            for k, v in batch.items()
+        }
+        metrics_shard = jax.tree.map(
+            lambda _: jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            {"loss": 0, "grad_norm": 0, "lr": 0},
+        )
+        return (
+            step,
+            (state, batch),
+            (state_shard, b_shard),
+            (state_shard, metrics_shard),
+            cfg,
+        )
+
+    if cell.kind == "prefill":
+        fn = zoo.prefill_fn(cfg)
+        batch = zoo.input_specs(cfg, shape)["batch"]
+        b_shard = {
+            k: jax.sharding.NamedSharding(
+                mesh, spec_for(v.shape, ("batch",) + (None,) * (len(v.shape) - 1), mesh, rules)
+            )
+            for k, v in batch.items()
+        }
+        out_shard = jax.sharding.NamedSharding(
+            mesh, spec_for((cell.global_batch, cfg.vocab_size), ("batch", "vocab"), mesh, rules)
+        )
+        return fn, (params, batch), (p_shard, b_shard), out_shard, cfg
+
+    # decode
+    fn = zoo.serve_step_fn(cfg)
+    specs = zoo.input_specs(cfg, shape)
+    caches = specs["caches"]
+    c_axes = zoo.cache_axes(cfg)
+    c_shard = build_sharding(caches, c_axes, mesh, rules)
+    t_shard = jax.sharding.NamedSharding(
+        mesh, spec_for((cell.global_batch, 1), ("batch", None), mesh, rules)
+    )
+    pos_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    logits_shard = jax.sharding.NamedSharding(
+        mesh,
+        spec_for((cell.global_batch, 1, cfg.vocab_size), ("batch", None, "vocab"), mesh, rules),
+    )
+    return (
+        fn,
+        (params, specs["tokens"], caches, specs["pos"]),
+        (p_shard, t_shard, c_shard, pos_shard),
+        (logits_shard, c_shard),
+        cfg,
+    )
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False, rules=RULES,
+             verbose: bool = True) -> dict:
+    """Lower + compile one cell; return the roofline record."""
+    cfg = zoo.get_config(arch)
+    ok, why = zoo.cell_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "supported": ok}
+    if not ok:
+        rec["skip_reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    fn, args, in_sh, out_sh, cfg = build_cell(arch, shape, mesh, rules=rules)
+    # global logical cost from the jaxpr (scan-trip aware; XLA's own
+    # cost_analysis counts loop bodies once — see xla_cost.py)
+    jcost = jaxpr_cost(jax.make_jaxpr(fn)(*args))
+    t_jaxpr = time.time() - t0
+    cell = zoo.SHAPES[shape]
+    # donation: train step donates its state (params+opt update in place);
+    # decode donates the KV caches — without this the memory analysis
+    # double-counts the dominant buffers (observed 88 GB/device on the
+    # qwen15_32b decode cell vs ~22 GB donated).
+    donate = (0,) if cell.kind == "train" else ((2,) if cell.kind == "decode" else ())
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0 - t_jaxpr
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower - t_jaxpr
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(compiled.memory_analysis())  # proves it fits
+        print({k: v for k, v in sorted(compiled.cost_analysis().items())
+               if not k.startswith("utilization")})  # FLOPs/bytes for §Roofline
+    hlo = compiled.as_text()
+    coll = collective_cost(hlo)  # per-device, while-trip multiplied
+
+    flops = float(jcost["flops"])  # global
+    bytes_hbm = float(jcost["bytes_low"])  # global, perfect-fusion bound
+    bytes_high = float(jcost["bytes_high"])  # no-fusion upper bound
+    coll_total = float(sum(coll.values()))  # per device
+
+    mflops = zoo.model_flops(cfg, shape)
+    t_comp = flops / (n_chips * HW["peak_flops_bf16"])
+    t_mem = bytes_hbm / (n_chips * HW["hbm_bw"])
+    t_coll = coll_total / HW["ici_bw"]
+    dominant = max(
+        [("compute", t_comp), ("memory", t_mem), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+
+    rec.update(
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        hlo_flops=flops,
+        hlo_bytes=bytes_hbm,
+        hlo_bytes_nofusion=bytes_high,
+        xla_flops_per_device_unscaled=float(cost.get("flops", 0.0)),
+        xla_bytes_per_device_unscaled=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=coll,
+        collective_bytes_total=coll_total,
+        per_device_output_bytes=getattr(mem, "output_size_in_bytes", None),
+        per_device_temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        per_device_argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        per_device_alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        per_device_peak_bytes=(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        ),
+        t_compute_s=t_comp,
+        t_memory_s=t_mem,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        model_flops=mflops,
+        useful_flops_ratio=(mflops / flops) if flops else None,
+    )
+    if verbose:
+        print(
+            f"[{mesh_name}] {arch} × {shape}: compile {t_compile:.1f}s  "
+            f"flops {flops:.3e}  bytes {bytes_hbm:.3e}  coll {coll_total:.3e}  "
+            f"t=(c {t_comp*1e3:.2f} | m {t_mem*1e3:.2f} | x {t_coll*1e3:.2f}) ms  "
+            f"dominant={dominant}  peak/dev "
+            f"{rec['per_device_peak_bytes']/1e9 if rec['per_device_peak_bytes'] else 0:.2f} GB"
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun.jsonl")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in zoo.ARCH_IDS:
+            if arch == "llama7b_like":
+                continue  # reference model: rooflined separately in §Perf
+            for shape in zoo.SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    failures = 0
+    with out.open("a") as f:
+        for multi in meshes:
+            for arch, shape in cells:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "pod2x16x16" if multi else "pod16x16",
+                        "supported": True, "error": str(e)[:2000],
+                    }
+                    failures += 1
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+    print(f"done; {failures} failures → {out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state). Single pod = (data=16, model=16) — 256 v5e
+chips; multi-pod = (pod=2, data=16, model=16) — 512 chips, with 'pod' an
+outer data-parallel axis reduced over DCN.
+
+When the host exposes more devices than the mesh needs (the dry-run
+process forces 512 so both meshes can be built in one process), the
+first prod(shape) devices are used.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+
+
+# TPU v5e hardware constants used by the roofline (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+    "hbm_bytes": 16e9,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py sets this)"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (subprocess with forced device count)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

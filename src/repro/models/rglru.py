@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrent block = (norm → [in-proj → causal conv → RG-LRU] ⊙ GeLU(gate
+branch) → out-proj) residual. The RG-LRU gates here are per-channel
+(diagonal) rather than Griffin's block-diagonal head matrices — the
+recurrence structure, state size and scan pattern (the systems-relevant
+parts) are identical; see DESIGN.md §7.
+
+    r_t = σ(w_r ⊙ x_t + b_r)          recurrence gate
+    i_t = σ(w_i ⊙ x_t + b_i)          input gate
+    a_t = exp(−c · softplus(Λ) · r_t)  with c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.models.scan_ops import chunked_linear_scan
+from repro.models.ssm import _causal_conv
+
+__all__ = [
+    "init_rglru_block",
+    "rglru_block_axes",
+    "apply_rglru_block",
+    "apply_rglru_block_decode",
+    "init_rglru_cache",
+    "rglru_cache_axes",
+]
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg, n: int) -> dict:
+    d, w, cw = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": jnp.ones((n, d), dt),
+        "w_in": dense_init(ks[0], (n, d, w), dt),
+        "w_gate": dense_init(ks[1], (n, d, w), dt),
+        "conv_w": dense_init(ks[2], (n, w, cw), dt, scale=0.5),
+        "conv_b": jnp.zeros((n, w), dt),
+        "rg_w": jnp.zeros((n, w), jnp.float32),
+        "rg_b": jnp.zeros((n, w), jnp.float32),
+        "ig_w": jnp.zeros((n, w), jnp.float32),
+        "ig_b": jnp.zeros((n, w), jnp.float32),
+        # Λ init so a ≈ 0.9..0.999 at r=1 (Griffin's stable range)
+        "lam": jnp.linspace(2.0, 6.0, w)[None].repeat(n, axis=0),
+        "w_out": dense_init(ks[3], (n, w, d), dt),
+    }
+
+
+def rglru_block_axes(cfg) -> dict:
+    return {
+        "norm": ("layers", "embed"),
+        "w_in": ("layers", "embed", "lru"),
+        "w_gate": ("layers", "embed", "lru"),
+        "conv_w": ("layers", "lru", None),
+        "conv_b": ("layers", "lru"),
+        "rg_w": ("layers", "lru"),
+        "rg_b": ("layers", "lru"),
+        "ig_w": ("layers", "lru"),
+        "ig_b": ("layers", "lru"),
+        "lam": ("layers", "lru"),
+        "w_out": ("layers", "lru", "embed"),
+    }
+
+
+def _gates(p, xc):
+    """xc: [B, S, W] fp32 post-conv. Returns (a, gated_input) fp32."""
+    r = jax.nn.sigmoid(p["rg_w"] * xc + p["rg_b"])
+    i = jax.nn.sigmoid(p["ig_w"] * xc + p["ig_b"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * (i * xc)
+
+
+def apply_rglru_block(cfg, p, x, ctx):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    branch = h @ p["w_in"]
+    gate = jax.nn.gelu((h @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    xc = _causal_conv(branch, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    a, b = _gates(p, xc)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, cfg.lru_width), jnp.float32)
+    hs, _ = chunked_linear_scan(a, b, h0, cfg.scan_chunk)
+    y = (hs.astype(jnp.float32) * gate).astype(x.dtype)
+    return x + y @ p["w_out"]
+
+
+def init_rglru_cache(cfg, n: int, batch: int, ctx_len: int, dtype) -> dict:
+    del ctx_len
+    return {
+        "conv": jnp.zeros((n, batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((n, batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_cache_axes(cfg) -> dict:
+    return {
+        "conv": ("layers", "batch", None, "lru"),
+        "h": ("layers", "batch", "lru"),
+    }
+
+
+def apply_rglru_block_decode(cfg, p, x, cache, ctx):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    branch = h @ p["w_in"]  # [B, 1, W]
+    gate = jax.nn.gelu((h @ p["w_gate"]).astype(jnp.float32), approximate=True)
+    window = jnp.concatenate([cache["conv"], branch], axis=1)
+    xc = jnp.einsum(
+        "bwc,cw->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    ) + p["conv_b"].astype(jnp.float32)
+    a, b = _gates(p, xc[:, None, :])
+    h_new = a[:, 0] * cache["h"] + b[:, 0]
+    y = (h_new[:, None, :] * gate).astype(x.dtype)
+    new_cache = {"conv": window[:, 1:], "h": h_new}
+    return x + y @ p["w_out"], new_cache

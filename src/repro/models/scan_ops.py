@@ -1,0 +1,50 @@
+"""Chunked linear-recurrence scan shared by Mamba and RG-LRU blocks.
+
+h_t = a_t ⊙ h_{t-1} + b_t  — associative, so each chunk runs a log-depth
+``lax.associative_scan`` (sequence-parallel on TPU) while an outer
+``lax.scan`` over chunks bounds live memory to O(chunk) and keeps the
+HLO O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_linear_scan"]
+
+
+def _combine(left, right):
+    (al, bl), (ar, br) = left, right
+    return al * ar, bl * ar + br
+
+
+def chunked_linear_scan(
+    a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, chunk: int = 1024
+):
+    """Inclusive scan of h_t = a_t*h_{t-1} + b_t along axis 1.
+
+    a, b: [B, S, ...]; h0: [B, ...]. Returns (hs [B, S, ...], h_last).
+    Computed in fp32 for stability, cast back to b.dtype.
+    """
+    B, S = a.shape[:2]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"S={S} not divisible by chunk={chunk}")
+    n = S // chunk
+    af = a.astype(jnp.float32).reshape(B, n, chunk, *a.shape[2:])
+    bf = b.astype(jnp.float32).reshape(B, n, chunk, *b.shape[2:])
+
+    def body(h, ab):
+        ac, bc = ab  # [B, chunk, ...]
+        a_cum, b_cum = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        hs = a_cum * h[:, None] + b_cum
+        return hs[:, -1], hs
+
+    body_ckpt = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    h_last, hs = jax.lax.scan(
+        body_ckpt, h0.astype(jnp.float32), (jnp.moveaxis(af, 1, 0), jnp.moveaxis(bf, 1, 0))
+    )
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, *a.shape[2:])
+    return hs.astype(b.dtype), h_last

@@ -1,0 +1,723 @@
+"""Decoder-only LM covering the dense / MoE / hybrid / SSM / VLM families.
+
+Design
+------
+- A model is a sequence of *segments*; each segment scans a stacked
+  *pattern* of block kinds (``('attn',)`` for dense, ``('rec','rec','attn')``
+  for recurrentgemma, ``('mamba',)`` for falcon-mamba, ...). Stacked
+  params keep HLO size O(1) in depth; pattern remainders (38 = 12×3 + 2)
+  become a short trailing segment.
+- Block kinds implement ``apply_<kind>_block`` (full-sequence) and
+  ``apply_<kind>_block_decode`` (one token + cache slice). All matmuls go
+  through :func:`repro.models.layers.mm`, so any weight leaf may be a
+  QTensor (and may carry a LoRA adapter subtree) — this is how QPruner's
+  quantized-base recovery fine-tune reuses the exact same forward.
+- Sharding: ``param_axes(cfg)`` returns a logical-axis pytree mirroring
+  ``init_params``; repro.distributed.sharding maps it onto the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import rglru as _rg
+from repro.models import ssm as _ssm
+from repro.distributed.sharding import constrain
+from repro.models.layers import (
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    dense_init,
+    embed_init,
+    gelu_mlp,
+    layer_norm,
+    mm,
+    moe_layer,
+    rms_norm,
+    sub,
+    swiglu,
+)
+
+__all__ = [
+    "ArchConfig",
+    "segments_of",
+    "init_params",
+    "param_axes",
+    "forward_hidden",
+    "lm_logits",
+    "train_loss",
+    "init_decode_caches",
+    "decode_cache_axes",
+    "decode_step",
+    "prefill",
+]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    head_dim: int = 0  # 0 → d_model // n_heads
+    norm: str = "rms"  # rms | ln
+    mlp: str = "swiglu"  # swiglu | gelu | none
+    attn_bias: bool = False
+    rope_theta: float = 1e4
+    pos_embed: str = "rope"  # rope | learned | none
+    max_pos: int = 0
+    sliding_window: int = 0  # 0 = full attention
+    # moe
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    # ssm
+    d_inner: int = 0
+    ssm_state: int = 0
+    dt_rank: int = 0
+    conv_width: int = 4
+    # hybrid (recurrentgemma)
+    block_pattern: tuple[str, ...] = ("attn",)
+    lru_width: int = 0
+    local_window: int = 0
+    # encdec (whisper)
+    n_enc_layers: int = 0
+    enc_len: int = 0
+    feat_dim: int = 0
+    # vlm (llava)
+    n_patches: int = 0
+    vis_dim: int = 0
+    # numerics / chunking
+    dtype: str = "bfloat16"
+    scan_chunk: int = 1024
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    moe_chunk: int = 1024
+    loss_chunk: int = 512
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: bool = True
+    # perf levers (§Perf): MXU-native bf16 attention dots; int8 KV cache
+    attn_bf16_dots: bool = False
+    kv_cache_dtype: str = ""  # "" = model dtype | "int8"
+    attn_block_skip: bool = False  # skip fully-masked attention blocks
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def segments_of(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(pattern, n_periods), ...] covering exactly cfg.n_layers blocks."""
+    P = len(cfg.block_pattern)
+    full, rem = divmod(cfg.n_layers, P)
+    segs = []
+    if full:
+        segs.append((tuple(cfg.block_pattern), full))
+    if rem:
+        segs.append((tuple(cfg.block_pattern[:rem]), 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Attention (+MLP / +MoE) blocks
+# ---------------------------------------------------------------------------
+
+
+def _norm_params(cfg, n: int):
+    if cfg.norm == "ln":
+        return {"w": jnp.ones((n, cfg.d_model), cfg.jdtype),
+                "b": jnp.zeros((n, cfg.d_model), cfg.jdtype)}
+    return {"w": jnp.ones((n, cfg.d_model), cfg.jdtype)}
+
+
+def _norm_axes(cfg):
+    if cfg.norm == "ln":
+        return {"w": ("layers", "embed"), "b": ("layers", "embed")}
+    return {"w": ("layers", "embed")}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "ln":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def _init_mlp(key, cfg, n: int) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.jdtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (n, d, f), dt),
+            "w_up": dense_init(ks[1], (n, d, f), dt),
+            "w_down": dense_init(ks[2], (n, f, d), dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], (n, d, f), dt),
+        "b_up": jnp.zeros((n, f), dt),
+        "w_down": dense_init(ks[1], (n, f, d), dt),
+        "b_down": jnp.zeros((n, d), dt),
+    }
+
+
+def _mlp_axes(cfg) -> dict:
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": ("layers", "embed", "mlp"),
+            "w_up": ("layers", "embed", "mlp"),
+            "w_down": ("layers", "mlp", "embed"),
+        }
+    return {
+        "w_up": ("layers", "embed", "mlp"),
+        "b_up": ("layers", "mlp"),
+        "w_down": ("layers", "mlp", "embed"),
+        "b_down": ("layers", "embed"),
+    }
+
+
+def _apply_mlp(cfg, p, x, ad=None):
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else functools.partial(
+            jax.nn.gelu, approximate=True
+        )
+        h = act(mm(x, p["w_gate"], sub(ad, "w_gate"))) * mm(
+            x, p["w_up"], sub(ad, "w_up")
+        )
+        return mm(h, p["w_down"], sub(ad, "w_down"))
+    h = jax.nn.gelu(
+        mm(x, p["w_up"], sub(ad, "w_up")) + p["b_up"].astype(x.dtype),
+        approximate=True,
+    )
+    return mm(h, p["w_down"], sub(ad, "w_down")) + p["b_down"].astype(x.dtype)
+
+
+def init_attn_block(key, cfg, n: int, *, window: Optional[int] = None, moe=False) -> dict:
+    d, hd, Hq, Hkv, dt = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.jdtype
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": _norm_params(cfg, n),
+        "wq": dense_init(ks[0], (n, d, Hq * hd), dt),
+        "wk": dense_init(ks[1], (n, d, Hkv * hd), dt),
+        "wv": dense_init(ks[2], (n, d, Hkv * hd), dt),
+        "wo": dense_init(ks[3], (n, Hq * hd, d), dt),
+        "ln2": _norm_params(cfg, n),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((n, Hq * hd), dt)
+        p["bk"] = jnp.zeros((n, Hkv * hd), dt)
+        p["bv"] = jnp.zeros((n, Hkv * hd), dt)
+    if moe:
+        E, f = cfg.n_experts, cfg.d_ff
+        p["router"] = dense_init(ks[4], (n, d, E), jnp.float32)
+        p["e_gate"] = dense_init(ks[5], (n, E, d, f), dt)
+        p["e_up"] = dense_init(ks[6], (n, E, d, f), dt)
+        p["e_down"] = dense_init(ks[7], (n, E, f, d), dt)
+    else:
+        p["mlp"] = _init_mlp(ks[4], cfg, n)
+    return p
+
+
+def attn_block_axes(cfg, *, moe=False) -> dict:
+    ax = {
+        "ln1": _norm_axes(cfg),
+        "wq": ("layers", "embed", "heads"),
+        "wk": ("layers", "embed", "kv"),
+        "wv": ("layers", "embed", "kv"),
+        "wo": ("layers", "heads", "embed"),
+        "ln2": _norm_axes(cfg),
+    }
+    if cfg.attn_bias:
+        ax["bq"] = ("layers", "heads")
+        ax["bk"] = ("layers", "kv")
+        ax["bv"] = ("layers", "kv")
+    if moe:
+        ax["router"] = ("layers", "embed", "experts")
+        ax["e_gate"] = ("layers", "experts", "embed", "mlp")
+        ax["e_up"] = ("layers", "experts", "embed", "mlp")
+        ax["e_down"] = ("layers", "experts", "mlp", "embed")
+    else:
+        ax["mlp"] = _mlp_axes(cfg)
+    return ax
+
+
+def _qkv(cfg, p, h, ad):
+    B, S = h.shape[:2]
+    hd = cfg.hd
+    q = mm(h, p["wq"], sub(ad, "wq"))
+    k = mm(h, p["wk"], sub(ad, "wk"))
+    v = mm(h, p["wv"], sub(ad, "wv"))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def apply_attn_block(cfg, p, x, ctx, ad=None, *, window: int = -1, moe=False):
+    """Full-sequence attention block → (x, aux). ctx: {'positions': [S]}."""
+    win = cfg.sliding_window if window < 0 else window
+    h = _apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p, h, ad)
+    if cfg.pos_embed == "rope":
+        pos = ctx["positions"]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    attn = chunked_attention(
+        q, k, v, causal=True, window=win,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        q_offset=ctx.get("q_offset", 0),
+        bf16_dots=cfg.attn_bf16_dots,
+        block_skip=cfg.attn_block_skip,
+    )
+    B, S = x.shape[:2]
+    x = x + mm(attn.reshape(B, S, -1), p["wo"], sub(ad, "wo"))
+    h2 = _apply_norm(cfg, p["ln2"], x)
+    if moe:
+        y, aux = moe_layer(
+            h2, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+            top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor,
+            chunk=cfg.moe_chunk,
+        )
+        return x + y, aux
+    return x + _apply_mlp(cfg, p["mlp"], h2, sub(ad, "mlp")), jnp.zeros((), jnp.float32)
+
+
+# -- decode --
+
+
+def init_attn_cache(cfg, n: int, batch: int, ctx_len: int, dtype, *, window: int = -1):
+    win = cfg.sliding_window if window < 0 else window
+    S = min(ctx_len, win) if win > 0 else ctx_len
+    hd = cfg.hd
+    if cfg.kv_cache_dtype == "int8":
+        # QPruner quantization applied to the cache: int8 codes + one
+        # absmax scale per (batch, position, head) vector
+        return {
+            "k": jnp.zeros((n, batch, S, cfg.n_kv_heads, hd), jnp.int8),
+            "v": jnp.zeros((n, batch, S, cfg.n_kv_heads, hd), jnp.int8),
+            "k_scale": jnp.zeros((n, batch, S, cfg.n_kv_heads), jnp.float32),
+            "v_scale": jnp.zeros((n, batch, S, cfg.n_kv_heads), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((n, batch, S, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n, batch, S, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def attn_cache_axes(cfg) -> dict:
+    ax = {
+        "k": ("layers", "batch", "seq", "kv", None),
+        "v": ("layers", "batch", "seq", "kv", None),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        ax["k_scale"] = ("layers", "batch", "seq", "kv")
+        ax["v_scale"] = ("layers", "batch", "seq", "kv")
+    return ax
+
+
+def _quantize_kv(x):
+    """[B, 1, H, hd] → (int8 codes, [B, 1, H] absmax scale/127)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax == 0, 1.0, amax) / 127.0
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def apply_attn_block_decode(cfg, p, x, cache, ctx, ad=None, *, window: int = -1, moe=False):
+    """One-token step. x: [B, 1, d]; cache {'k','v': [B, S, Hkv, hd]}.
+
+    ``ctx['pos']`` — scalar absolute position of this token. Ring-buffer
+    writes when the cache is window-bounded.
+    """
+    win = cfg.sliding_window if window < 0 else window
+    h = _apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p, h, ad)
+    pos = ctx["pos"]
+    if cfg.pos_embed == "rope":
+        pvec = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k = apply_rope(k, pvec, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = jnp.where(win > 0, pos % S, jnp.minimum(pos, S - 1))
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        ctx_len = jnp.minimum(pos + 1, S)
+        attn = decode_attention(q, ck, cv, ctx_len, k_scale=cks, v_scale=cvs)
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        ctx_len = jnp.minimum(pos + 1, S)
+        attn = decode_attention(q, ck, cv, ctx_len, bf16_dots=cfg.attn_bf16_dots)
+        new_cache = {"k": ck, "v": cv}
+    B = x.shape[0]
+    x = x + mm(attn.reshape(B, 1, -1), p["wo"], sub(ad, "wo"))
+    h2 = _apply_norm(cfg, p["ln2"], x)
+    if moe:
+        y, _ = moe_layer(
+            h2, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+            top_k=cfg.moe_top_k, capacity_factor=8.0, chunk=1,
+        )
+        x = x + y
+    else:
+        x = x + _apply_mlp(cfg, p["mlp"], h2, sub(ad, "mlp"))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block-kind registry
+# ---------------------------------------------------------------------------
+
+_KIND = {
+    "attn": dict(
+        init=lambda key, cfg, n: init_attn_block(key, cfg, n),
+        axes=lambda cfg: attn_block_axes(cfg),
+        apply=lambda cfg, p, x, ctx, ad=None: apply_attn_block(cfg, p, x, ctx, ad),
+        cache=lambda cfg, n, b, s, dt: init_attn_cache(cfg, n, b, s, dt),
+        cache_axes=lambda cfg: attn_cache_axes(cfg),
+        decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(cfg, p, x, c, ctx, ad),
+    ),
+    "moe": dict(
+        init=lambda key, cfg, n: init_attn_block(key, cfg, n, moe=True),
+        axes=lambda cfg: attn_block_axes(cfg, moe=True),
+        apply=lambda cfg, p, x, ctx, ad=None: apply_attn_block(cfg, p, x, ctx, ad, moe=True),
+        cache=lambda cfg, n, b, s, dt: init_attn_cache(cfg, n, b, s, dt),
+        cache_axes=lambda cfg: attn_cache_axes(cfg),
+        decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(cfg, p, x, c, ctx, ad, moe=True),
+    ),
+    "localattn": dict(
+        init=lambda key, cfg, n: init_attn_block(key, cfg, n),
+        axes=lambda cfg: attn_block_axes(cfg),
+        apply=lambda cfg, p, x, ctx, ad=None: apply_attn_block(
+            cfg, p, x, ctx, ad, window=cfg.local_window
+        ),
+        cache=lambda cfg, n, b, s, dt: init_attn_cache(
+            cfg, n, b, s, dt, window=cfg.local_window
+        ),
+        cache_axes=lambda cfg: attn_cache_axes(cfg),
+        decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(
+            cfg, p, x, c, ctx, ad, window=cfg.local_window
+        ),
+    ),
+    "mamba": dict(
+        init=_ssm.init_mamba_block,
+        axes=_ssm.mamba_block_axes,
+        apply=lambda cfg, p, x, ctx, ad=None: (
+            _ssm.apply_mamba_block(cfg, p, x, ctx),
+            jnp.zeros((), jnp.float32),
+        ),
+        cache=_ssm.init_mamba_cache,
+        cache_axes=_ssm.mamba_cache_axes,
+        decode=lambda cfg, p, x, c, ctx, ad=None: _ssm.apply_mamba_block_decode(cfg, p, x, c, ctx),
+    ),
+    "rec": dict(
+        init=_rg.init_rglru_block,
+        axes=_rg.rglru_block_axes,
+        apply=lambda cfg, p, x, ctx, ad=None: (
+            _rg.apply_rglru_block(cfg, p, x, ctx),
+            jnp.zeros((), jnp.float32),
+        ),
+        cache=_rg.init_rglru_cache,
+        cache_axes=_rg.rglru_cache_axes,
+        decode=lambda cfg, p, x, c, ctx, ad=None: _rg.apply_rglru_block_decode(cfg, p, x, c, ctx),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / axes
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, 16)
+    dt = cfg.jdtype
+    params: dict[str, Any] = {
+        "embed": {"tok": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt)}
+    }
+    if cfg.pos_embed == "learned":
+        params["embed"]["pos"] = embed_init(keys[1], (cfg.max_pos, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        params["mm_proj"] = dense_init(keys[2], (cfg.vis_dim, cfg.d_model), dt)
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"p{pi}_{kind}"] = _KIND[kind]["init"](
+                jax.random.fold_in(keys[3], si * 16 + pi), cfg, n
+            )
+        params[f"seg{si}"] = seg
+    params["final_norm"] = (
+        {"w": jnp.ones((cfg.d_model,), dt), "b": jnp.zeros((cfg.d_model,), dt)}
+        if cfg.norm == "ln"
+        else {"w": jnp.ones((cfg.d_model,), dt)}
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[4], (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    axes: dict[str, Any] = {"embed": {"tok": ("vocab", "embed")}}
+    if cfg.pos_embed == "learned":
+        axes["embed"]["pos"] = (None, "embed")
+    if cfg.family == "vlm":
+        axes["mm_proj"] = (None, "embed")
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"p{pi}_{kind}"] = _KIND[kind]["axes"](cfg)
+        axes[f"seg{si}"] = seg
+    axes["final_norm"] = (
+        {"w": ("embed",), "b": ("embed",)} if cfg.norm == "ln" else {"w": ("embed",)}
+    )
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens, patches=None, positions=None):
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    if cfg.family == "vlm" and patches is not None:
+        vis = patches.astype(x.dtype) @ params["mm_proj"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    if cfg.pos_embed == "learned":
+        S = x.shape[1]
+        pos = positions if positions is not None else jnp.arange(S)
+        x = x + jnp.take(params["embed"]["pos"], jnp.minimum(pos, cfg.max_pos - 1), axis=0)
+    return x
+
+
+def _segment_scan(cfg, seg_params, pattern, x, ctx, seg_ad=None):
+    """Scan one segment's stacked pattern over its periods → (x, aux)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        p_sl = xs[0] if seg_ad is not None else xs
+        ad_sl = xs[1] if seg_ad is not None else None
+        for pi, kind in enumerate(pattern):
+            key = f"p{pi}_{kind}"
+            x, a = _KIND[kind]["apply"](cfg, p_sl[key], x, ctx, sub(ad_sl, key))
+            x = constrain(x, "batch", "seq_act", None)
+            aux = aux + a
+        return (x, aux), None
+
+    body_fn = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat
+        else body
+    )
+    xs = (seg_params, seg_ad) if seg_ad is not None else seg_params
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux
+
+
+def forward_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    *,
+    patches: Optional[jnp.ndarray] = None,
+    adapters: Optional[dict] = None,
+    q_offset: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S_text] → (hidden [B, S, d], aux_loss []).
+
+    For VLM, S = n_patches + S_text.
+    """
+    x = _embed(cfg, params, tokens, patches)
+    x = constrain(x, "batch", "seq_act", None)
+    S = x.shape[1]
+    ctx: dict[str, Any] = {
+        "positions": q_offset + jnp.arange(S),
+        "q_offset": q_offset,
+    }
+    aux = jnp.zeros((), jnp.float32)
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        ad = sub(adapters, f"seg{si}") if adapters is not None else None
+        x, a = _segment_scan(cfg, params[f"seg{si}"], pattern, x, ctx, ad)
+        aux = aux + a
+    fn = params["final_norm"]
+    x = (
+        layer_norm(x, fn["w"], fn["b"], cfg.norm_eps)
+        if cfg.norm == "ln"
+        else rms_norm(x, fn["w"], cfg.norm_eps)
+    )
+    return x, aux
+
+
+def lm_logits(cfg, params, hidden):
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    return hidden @ head.astype(hidden.dtype)
+
+
+def train_loss(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    adapters: Optional[dict] = None,
+    aux_weight: float = 0.01,
+) -> jnp.ndarray:
+    """Next-token CE, sequence-chunked so [B, S, V] is never materialised."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    hidden, aux = forward_hidden(
+        cfg, params, tokens, patches=batch.get("patches"), adapters=adapters
+    )
+    if cfg.family == "vlm":  # loss only over text positions
+        hidden = hidden[:, -tokens.shape[1]:]
+    B, S, _ = hidden.shape
+    c = min(cfg.loss_chunk, S)
+    n = S // c
+    head = (params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"])
+
+    hg = jnp.moveaxis(hidden[:, : n * c].reshape(B, n, c, -1), 1, 0)
+    lg = jnp.moveaxis(labels[:, : n * c].reshape(B, n, c), 1, 0)
+    mg = (
+        jnp.moveaxis(mask[:, : n * c].reshape(B, n, c), 1, 0)
+        if mask is not None
+        else jnp.ones((n, B, c), jnp.float32)
+    )
+
+    def body(acc, xs):
+        h, l, m = xs
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m
+        return (acc[0] + nll.sum(), acc[1] + m.sum()), None
+
+    # remat: recompute the [B, c, V] logits chunk in backward rather than
+    # saving all n chunks (observed 40 GB/device on qwen2 train_4k).
+    body_ckpt = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body_ckpt, (jnp.zeros(()), jnp.zeros(())), (hg, lg, mg))
+    return tot / jnp.maximum(cnt, 1.0) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, ctx_len: int) -> dict:
+    caches = {}
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"p{pi}_{kind}"] = _KIND[kind]["cache"](cfg, n, batch, ctx_len, cfg.jdtype)
+        caches[f"seg{si}"] = seg
+    return caches
+
+
+def decode_cache_axes(cfg: ArchConfig) -> dict:
+    axes = {}
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"p{pi}_{kind}"] = _KIND[kind]["cache_axes"](cfg)
+        axes[f"seg{si}"] = seg
+    return axes
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,  # [B, 1]
+    caches: dict,
+    pos: jnp.ndarray,  # scalar int32 — absolute position
+    *,
+    adapters: Optional[dict] = None,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step → (logits [B, 1, V], updated caches)."""
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    x = constrain(x, "batch", "seq_act", None)
+    if cfg.pos_embed == "learned":
+        x = x + params["embed"]["pos"][jnp.minimum(pos, cfg.max_pos - 1)][None, None]
+    ctx = {"pos": pos}
+    new_caches = {}
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg_p = params[f"seg{si}"]
+        seg_c = caches[f"seg{si}"]
+        seg_ad = sub(adapters, f"seg{si}") if adapters is not None else None
+
+        def body(carry, xs):
+            x = carry
+            if seg_ad is not None:
+                p_sl, c_sl, ad_sl = xs
+            else:
+                p_sl, c_sl = xs
+                ad_sl = None
+            new_c = {}
+            for pi, kind in enumerate(pattern):
+                key = f"p{pi}_{kind}"
+                x, nc = _KIND[kind]["decode"](
+                    cfg, p_sl[key], x, c_sl[key], ctx, sub(ad_sl, key)
+                )
+                x = constrain(x, "batch", "seq_act", None)
+                new_c[key] = nc
+            return x, new_c
+
+        xs = (seg_p, seg_c, seg_ad) if seg_ad is not None else (seg_p, seg_c)
+        x, new_seg_c = jax.lax.scan(body, x, xs)
+        new_caches[f"seg{si}"] = new_seg_c
+    fn = params["final_norm"]
+    x = (
+        layer_norm(x, fn["w"], fn["b"], cfg.norm_eps)
+        if cfg.norm == "ln"
+        else rms_norm(x, fn["w"], cfg.norm_eps)
+    )
+    return lm_logits(cfg, params, x), new_caches
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    *,
+    patches: Optional[jnp.ndarray] = None,
+    adapters: Optional[dict] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefill forward → (last-position logits [B, V], aux).
+
+    (Cache population during prefill is modelled in serve.engine by a
+    scan of decode steps for correctness tests; the dry-run prefill cell
+    measures the full-sequence forward, which dominates cost.)
+    """
+    hidden, aux = forward_hidden(cfg, params, tokens, patches=patches, adapters=adapters)
+    return lm_logits(cfg, params, hidden[:, -1]), aux

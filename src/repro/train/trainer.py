@@ -1,0 +1,93 @@
+"""Train-step builders: full fine-tune and QPruner (frozen base + LoRA).
+
+``make_train_step`` — bf16 params, fp32 AdamW moments, optional
+microbatch gradient accumulation (scan), optional gradient compression
+hook applied to the *flat* grad pytree before the optimizer (the
+compression itself lives in repro.distributed.grad_compress and is a
+no-op unless configured).
+
+``make_qpruner_train_step`` — the paper's recovery path: the quantized
+(QTensor) base is a frozen input; only LoRA adapters train. Optimizer
+state is O(rank), which is the memory story of the paper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+__all__ = ["init_train_state", "make_train_step", "make_qpruner_train_step"]
+
+
+def init_train_state(params, opt_cfg: OptimizerConfig) -> dict:
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def _accumulate_grads(loss_fn, params, batch, accum: int):
+    """Mean loss/grads over ``accum`` microbatches via lax.scan."""
+    if accum <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        return (acc_loss + loss, jax.tree.map(jnp.add, acc_g, g)), None
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+    inv = 1.0 / accum
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: OptimizerConfig,
+    *,
+    grad_accum: int = 1,
+    grad_transform: Optional[Callable] = None,
+):
+    """loss_fn(params, batch) -> scalar. Returns step(state, batch)."""
+
+    def step(state, batch):
+        loss, grads = _accumulate_grads(loss_fn, state["params"], batch, grad_accum)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_p, new_opt, gnorm = adamw_update(grads, state["opt"], state["params"], opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": opt_cfg.lr_at(new_opt["step"])}
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    return step
+
+
+def make_qpruner_train_step(
+    loss_fn: Callable,
+    opt_cfg: OptimizerConfig,
+    *,
+    grad_accum: int = 1,
+):
+    """QPruner recovery: loss_fn(params, batch, adapters) with frozen params.
+
+    state = {'adapters', 'opt'}; the quantized base rides along as a
+    separate (non-differentiated) argument.
+    """
+
+    def step(state, qparams, batch):
+        def adapter_loss(adapters, mb):
+            return loss_fn(qparams, mb, adapters)
+
+        loss, grads = _accumulate_grads(adapter_loss, state["adapters"], batch, grad_accum)
+        new_a, new_opt, gnorm = adamw_update(grads, state["opt"], state["adapters"], opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return {"adapters": new_a, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run process forces 512 in its own env;
+# multi-device semantics are tested via subprocesses — see test_distributed).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,97 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import CODEBOOKS, QuantConfig, qtensor_from_dense
+from repro.kernels import ref
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.lora_matmul import lora_qmatmul
+from repro.kernels.nf4_matmul import nf4_matmul
+from repro.kernels.quantize import quantize4
+
+RNG = np.random.default_rng(0)
+SHAPES = [(128, 128, 128), (256, 512, 256), (64, 256, 512), (512, 128, 384)]
+
+
+def _book(name):
+    return tuple(float(v) for v in CODEBOOKS[name])
+
+
+def _mk(m, k, n, dtype, codebook="nf4"):
+    x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    codes, scales = ref.quantize4_ref(w, CODEBOOKS[codebook], 64)
+    return x, codes, scales
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("codebook", ["nf4", "fp4"])
+def test_nf4_matmul_sweep(shape, dtype, codebook):
+    m, k, n = shape
+    x, codes, scales = _mk(m, k, n, dtype, codebook)
+    got = nf4_matmul(
+        x, codes, scales, codebook=_book(codebook), block=64,
+        bm=128, bk=128, bn=128, interpret=True,
+    )
+    want = ref.qmatmul4_ref(x, codes, scales, CODEBOOKS[codebook], 64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol * 8,
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_sweep(shape, dtype):
+    m, k, n = shape
+    x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    qt = qtensor_from_dense(w, QuantConfig("int8", 64, double_quant=False))
+    got = int8_matmul(x, qt.codes, qt.scales.reshape(k, -1), block=64,
+                      bm=64, bk=128, bn=128, interpret=True)
+    want = ref.qmatmul8_ref(x, qt.codes, qt.scales.reshape(k, -1), 64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol * 8,
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_quantize4_kernel_exact(shape):
+    _, k, n = shape
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    ck, sk = quantize4(w, codebook=_book("nf4"), block=64, bk=128, bn=128,
+                       interpret=True)
+    cr, sr = ref.quantize4_ref(w, CODEBOOKS["nf4"], 64)
+    assert bool(jnp.all(ck == cr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("r", [4, 16, 64])
+def test_lora_qmatmul_fused(r):
+    m, k, n = 128, 256, 256
+    x, codes, scales = _mk(m, k, n, jnp.float32)
+    a = jnp.asarray(RNG.normal(size=(k, r)).astype(np.float32)) * 0.05
+    b = jnp.asarray(RNG.normal(size=(r, n)).astype(np.float32)) * 0.05
+    got = lora_qmatmul(
+        x, codes, scales, a, b, codebook=_book("nf4"), block=64,
+        lora_scale=2.0, bm=64, bk=128, bn=128, interpret=True,
+    )
+    want = ref.lora_qmatmul4_ref(x, codes, scales, CODEBOOKS["nf4"], 64, a, b, 2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
+
+
+def test_kernel_consistent_with_core_quantization():
+    """quantize4 kernel output == repro.core.quantization packing."""
+    from repro.core.quantization import pack_codes, quantize_blockwise
+
+    w = jnp.asarray(RNG.normal(size=(256, 512)).astype(np.float32))
+    ck, sk = quantize4(w, codebook=_book("nf4"), block=64, interpret=True)
+    c2, s2 = quantize_blockwise(w, QuantConfig("nf4", 64))
+    assert bool(jnp.all(pack_codes(c2, 4) == ck))
+    np.testing.assert_allclose(np.asarray(s2).reshape(256, -1), np.asarray(sk), rtol=1e-6)

@@ -1,0 +1,79 @@
+"""§Perf levers must preserve model semantics (within stated tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model_zoo as zoo
+from repro.models import transformer as tf
+
+RNG = np.random.default_rng(0)
+
+
+def _decode_vs_forward(cfg, tol):
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    hidden, _ = tf.forward_hidden(cfg, params, toks)
+    full = tf.lm_logits(cfg, params, hidden)
+    caches = zoo.cache_init(cfg)(cfg, B, S)
+    step = jax.jit(zoo.serve_step_fn(cfg))
+    worst = 0.0
+    for t in range(S):
+        lg, caches = step(params, toks[:, t : t + 1], caches, jnp.asarray(t, jnp.int32))
+        worst = max(worst, float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    rel = worst / float(jnp.max(jnp.abs(full)))
+    assert rel < tol, (worst, rel)
+
+
+def test_bf16_dots_decode_exact_on_f32_model():
+    cfg = zoo.get_smoke_config("llama7b_like").with_(attn_bf16_dots=True)
+    _decode_vs_forward(cfg, 1e-4)
+
+
+def test_int8_kv_cache_decode_within_quant_error():
+    cfg = zoo.get_smoke_config("llama7b_like").with_(kv_cache_dtype="int8")
+    _decode_vs_forward(cfg, 0.05)  # int8 per-vector absmax ≈ 2% rel
+
+
+def test_int8_kv_cache_is_actually_int8():
+    cfg = zoo.get_smoke_config("llama7b_like").with_(kv_cache_dtype="int8")
+    caches = zoo.cache_init(cfg)(cfg, 2, 16)
+    leaf = caches["seg0"]["p0_attn"]["k"]
+    assert leaf.dtype == jnp.int8
+    assert "k_scale" in caches["seg0"]["p0_attn"]
+
+
+def test_block_skip_forward_bit_exact():
+    cfg0 = zoo.get_smoke_config("mixtral_8x22b").with_(capacity_factor=8.0)
+    cfg1 = cfg0.with_(attn_block_skip=True)
+    params = zoo.init_fn(cfg0)(cfg0, jax.random.PRNGKey(0))
+    toks = jnp.asarray(RNG.integers(0, cfg0.vocab_size, (2, 32)), jnp.int32)
+    h0, _ = tf.forward_hidden(cfg0, params, toks)
+    h1, _ = tf.forward_hidden(cfg1, params, toks)
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+
+
+def test_block_skip_gradients_match():
+    cfg0 = zoo.get_smoke_config("llama7b_like")
+    cfg1 = cfg0.with_(attn_block_skip=True)
+    params = zoo.init_fn(cfg0)(cfg0, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg0.vocab_size, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg0.vocab_size, (2, 32)), jnp.int32),
+    }
+    g0 = jax.grad(zoo.train_loss_fn(cfg0))(params, batch)
+    g1 = jax.grad(zoo.train_loss_fn(cfg1))(params, batch)
+    worst = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1))
+    )
+    assert worst < 1e-5, worst
+
+
+def test_levers_compose():
+    cfg = zoo.get_smoke_config("mixtral_8x22b").with_(
+        capacity_factor=8.0, attn_block_skip=True, attn_bf16_dots=True,
+        kv_cache_dtype="int8",
+    )
+    _decode_vs_forward(cfg, 0.05)

@@ -1,0 +1,267 @@
+"""QPruner core: pruning invariants, MI/BO behaviour, PEFT, pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import peft
+from repro.core.bayesopt import BayesOpt, GaussianProcess, pareto_front
+from repro.core.importance import aggregate_groups, estimate_importance
+from repro.core.mixed_precision import LayerShapes, MemoryModel, allocate_bits
+from repro.core.mutual_info import histogram_mi
+from repro.core.pruning import (
+    GroupSpec,
+    ParamRule,
+    apply_plan,
+    compute_group_scores,
+    flatten_params,
+    make_plan,
+    pruned_param_count,
+)
+from repro.core.qpruner import QPrunerConfig, prune_model, quantize_blocks
+from repro.core.quantization import QuantConfig
+from repro.models import model_zoo as zoo
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Pruning invariants (property tests)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    rate=st.floats(0.1, 0.8),
+    n_groups=st.sampled_from([8, 16, 32]),
+    layers=st.integers(1, 4),
+)
+@settings(max_examples=20, deadline=None)
+def test_plan_keeps_top_groups(rate, n_groups, layers):
+    """Kept groups must be exactly the per-layer top-k by score."""
+    scores = {"g": jnp.asarray(RNG.normal(size=(layers, n_groups)))}
+    spec = GroupSpec("g", n_groups, (ParamRule("x", 0, 1),))
+    plan = make_plan(scores, [spec], rate)
+    keep = np.asarray(plan.keep["g"])
+    n_keep = keep.shape[1]
+    for l in range(layers):
+        top = set(np.argsort(-np.asarray(scores["g"][l]))[:n_keep].tolist())
+        assert set(keep[l].tolist()) == top
+        assert list(keep[l]) == sorted(keep[l])  # order preserved
+
+
+@given(rate=st.floats(0.0, 0.9))
+@settings(max_examples=15, deadline=None)
+def test_param_count_monotone_in_rate(rate):
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    specs = zoo.prune_specs(cfg)
+    scores = {
+        s.name: jnp.asarray(RNG.normal(size=(cfg.n_layers, s.n_groups)))
+        for s in specs
+    }
+    plan = make_plan(scores, specs, rate)
+    pruned = apply_plan(params, plan, specs)
+    assert pruned_param_count(pruned) <= pruned_param_count(params)
+
+
+def test_pruned_model_runs_and_matches_importance_order():
+    """End-to-end prune on a real model; higher rate → fewer params; the
+    pruned model still produces a finite loss."""
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+    }
+    counts = []
+    for rate in (0.2, 0.5):
+        pruned, pcfg, _ = prune_model(cfg, params, [batch], QPrunerConfig(prune_rate=rate))
+        counts.append(pruned_param_count(pruned))
+        loss = zoo.train_loss_fn(pcfg)(pruned, batch)
+        assert bool(jnp.isfinite(loss))
+    assert counts[1] < counts[0] < pruned_param_count(params)
+
+
+def test_mqa_kv_head_never_pruned():
+    cfg = zoo.get_smoke_config("granite_34b")  # kv=1
+    specs = zoo.prune_specs(cfg)
+    byname = {s.name: s for s in specs}
+    assert "q_heads" in byname
+    for rule in byname["q_heads"].rules:
+        assert "wk" not in rule.path and "wv" not in rule.path
+
+
+# ---------------------------------------------------------------------------
+# Importance aggregation (Table 2 variants)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("agg", ["sum", "max", "prod", "last"])
+def test_aggregations_shapes(agg):
+    x = jnp.asarray(RNG.normal(size=(3, 8, 32)))  # [L, d, groups*per]
+    out = aggregate_groups(x, 2, 8, agg=agg)
+    assert out.shape == (3, 8)
+
+
+def test_order2_uses_fisher():
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+    }
+    loss_fn = zoo.train_loss_fn(cfg)
+    e1 = estimate_importance(lambda p, b: loss_fn(p, b), params, [batch], order=1)
+    e2 = estimate_importance(lambda p, b: loss_fn(p, b), params, [batch], order=2)
+    l1 = flatten_params(e1.scores)["lm_head"]
+    l2 = flatten_params(e2.scores)["lm_head"]
+    assert not bool(jnp.allclose(l1, l2))
+
+
+# ---------------------------------------------------------------------------
+# MI + allocation
+# ---------------------------------------------------------------------------
+
+
+def test_mi_orders_informative_layers():
+    y = RNG.integers(0, 4, 512)
+    x_inf = jnp.asarray(np.eye(4)[y] @ RNG.normal(size=(4, 32)) + 0.1 * RNG.normal(size=(512, 32)))
+    x_noise = jnp.asarray(RNG.normal(size=(512, 32)))
+    hi = float(histogram_mi(x_inf, jnp.asarray(y), n_classes=4))
+    lo = float(histogram_mi(x_noise, jnp.asarray(y), n_classes=4))
+    assert hi > lo + 0.2
+
+
+@given(frac=st.floats(0.0, 1.0))
+@settings(max_examples=15, deadline=None)
+def test_allocation_respects_budget(frac):
+    L = 12
+    layers = [LayerShapes(((64, 64),)) for _ in range(L)]
+    mm = MemoryModel(layers)
+    bits = allocate_bits(RNG.normal(size=L), mm, max_frac_8bit=frac)
+    assert np.mean(bits == 8) <= frac + 1e-9
+    assert set(np.unique(bits)) <= {4, 8}
+
+
+def test_allocation_prefers_high_mi():
+    L = 8
+    mm = MemoryModel([LayerShapes(((64, 64),)) for _ in range(L)])
+    mi = np.arange(L, dtype=float)  # layer 7 most informative
+    bits = allocate_bits(mi, mm, max_frac_8bit=0.25)
+    assert bits[-1] == 8 and bits[-2] == 8 and np.sum(bits == 8) == 2
+
+
+# ---------------------------------------------------------------------------
+# Bayesian optimization
+# ---------------------------------------------------------------------------
+
+
+def test_gp_interpolates():
+    x = np.asarray([[0, 0, 1], [1, 1, 0], [0, 1, 1]], float)
+    y = np.asarray([1.0, 2.0, 3.0])
+    gp = GaussianProcess(noise_var=1e-6).fit(x, y)
+    mu, sd = gp.predict(x)
+    np.testing.assert_allclose(mu, y, atol=1e-2)
+    assert np.all(sd < 0.2)
+
+
+def test_bo_finds_planted_optimum():
+    L = 10
+    hidden = np.where(np.arange(L) % 3 == 0, 8, 4)
+
+    def ev(bits):
+        return -float(np.mean(bits != hidden)), float(np.sum(bits))
+
+    bo = BayesOpt(L, ev, lambda b: float(np.sum(b)), memory_limit=8.0 * L,
+                  max_frac_8bit=0.6, seed=0)
+    res = bo.run([np.full(L, 4)], n_iterations=30)
+    assert res.best_perf >= -0.11  # ≤1 bit wrong
+
+
+def test_bo_respects_memory_constraint():
+    L = 6
+    limit = 4.0 * L + 4  # allows at most one 8-bit layer
+    seen = []
+
+    def ev(bits):
+        seen.append(bits.copy())
+        return float(np.sum(bits == 8)), float(np.sum(bits))
+
+    bo = BayesOpt(L, ev, lambda b: float(np.sum(b)), memory_limit=limit, seed=1)
+    bo.run([np.full(L, 4)], n_iterations=10)
+    for b in seen:
+        assert np.sum(b) <= limit
+
+
+def test_pareto_front_dominance():
+    pts = [(1.0, 10.0), (2.0, 20.0), (0.5, 5.0), (2.0, 15.0), (1.5, 30.0)]
+    front = pareto_front(pts)
+    assert 1 not in front  # (2,20) dominated by (2,15)
+    assert 4 not in front  # (1.5,30) dominated by (2,15)
+    assert set(front) == {0, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# PEFT + mixed quantization
+# ---------------------------------------------------------------------------
+
+
+def test_loftq_reduces_error_vs_plain():
+    from repro.core.quantization import quantization_error, qtensor_to_dense
+
+    w = jnp.asarray(RNG.normal(size=(256, 128)).astype(np.float32))
+    qcfg = QuantConfig("nf4", 64)
+    plain = float(quantization_error(w, qcfg))
+    qt, ad = peft.loftq_init(w, qcfg, peft.LoraConfig(rank=16, loftq_iters=1))
+    approx = qtensor_to_dense(qt, out_dtype=jnp.float32) + (
+        ad["a"].astype(jnp.float32) @ ad["b"].astype(jnp.float32)
+    )
+    assert float(jnp.linalg.norm(w - approx)) < plain
+
+
+def test_quantize_blocks_mixed_precision_effects():
+    """8-bit layers must be closer to dense than 4-bit layers."""
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    qcfg = QPrunerConfig()
+    L = cfg.n_layers
+    bits = np.asarray([8] * (L // 2) + [4] * (L - L // 2))
+    qp, ad, mem = quantize_blocks(cfg, params, bits, qcfg, init_adapters=False)
+    w0 = flatten_params(params)["seg0/p0_attn/wq"]
+    wq = flatten_params(qp)["seg0/p0_attn/wq"]
+    err_8bit = float(jnp.linalg.norm(w0[0] - wq[0]))
+    err_4bit = float(jnp.linalg.norm(w0[-1] - wq[-1]))
+    assert err_8bit < err_4bit
+    # memory accounting: mixed < all-dense
+    _, _, mem4 = quantize_blocks(cfg, params, np.full(L, 4), qcfg, init_adapters=False)
+    _, _, mem8 = quantize_blocks(cfg, params, np.full(L, 8), qcfg, init_adapters=False)
+    assert mem4 < mem < mem8
+
+
+def test_adapter_training_only_touches_adapters():
+    from repro.train.optimizer import OptimizerConfig, adamw_init
+    from repro.train.trainer import make_qpruner_train_step
+
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    qcfg = QPrunerConfig(lora=peft.LoraConfig(rank=4))
+    qp, adapters, _ = quantize_blocks(cfg, params, np.full(cfg.n_layers, 4), qcfg)
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+    }
+    loss_fn = zoo.train_loss_fn(cfg)
+    step = jax.jit(make_qpruner_train_step(
+        lambda p, b, a: loss_fn(p, b, adapters=a),
+        OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=5, schedule="constant"),
+    ))
+    state = {"adapters": adapters, "opt": adamw_init(adapters)}
+    losses = []
+    for _ in range(4):
+        state, m = step(state, qp, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    # base must be untouched (it's an input, not state)
+    assert bool(jnp.all(flatten_params(qp)["seg0/p0_attn/wq"] ==
+                        flatten_params(qp)["seg0/p0_attn/wq"]))

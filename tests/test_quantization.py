@@ -1,0 +1,101 @@
+"""Quantization core: codebooks, packing, QTensor, memory model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    CODEBOOKS,
+    QuantConfig,
+    dense_bytes,
+    double_dequantize_scales,
+    double_quantize_scales,
+    pack_codes,
+    qtensor_from_dense,
+    qtensor_matmul,
+    qtensor_to_dense,
+    quant_bytes,
+    quantization_error,
+    quantize_blockwise,
+    unpack_codes,
+)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("cb", ["nf4", "fp4", "int8", "int4", "uniform4", "int2"])
+def test_roundtrip_error_bounded(cb):
+    """Dequantized values stay within one codebook step of the original."""
+    cfg = QuantConfig(cb, 64, double_quant=False)
+    w = jnp.asarray(RNG.normal(size=(128, 256)).astype(np.float32))
+    qt = qtensor_from_dense(w, cfg)
+    wd = qtensor_to_dense(qt, out_dtype=jnp.float32)
+    book = np.sort(CODEBOOKS[cb])
+    max_gap = np.max(np.diff(book))
+    # per-block absmax scaling: error ≤ gap/2 × blockwise absmax
+    blocks = np.asarray(w).reshape(-1, 64)
+    amax = np.abs(blocks).max(axis=1, keepdims=True)
+    err = np.abs(np.asarray(wd).reshape(-1, 64) - blocks)
+    assert np.all(err <= max_gap / 2 * amax + 1e-6)
+
+
+def test_nf4_beats_uniform_on_gaussian():
+    w = jnp.asarray(RNG.normal(size=(256, 256)).astype(np.float32))
+    e_nf4 = float(quantization_error(w, QuantConfig("nf4", 64)))
+    e_uni = float(quantization_error(w, QuantConfig("uniform4", 64)))
+    assert e_nf4 < e_uni
+
+
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    rows=st.integers(1, 8),
+    cols=st.sampled_from([8, 16, 64]),
+)
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_bijective(bits, rows, cols):
+    rng = np.random.default_rng(42)
+    codes = jnp.asarray(rng.integers(0, 2**bits, (rows, cols)).astype(np.uint8))
+    packed = pack_codes(codes, bits)
+    assert packed.shape[-1] == cols * bits // 8
+    assert bool(jnp.all(unpack_codes(packed, bits, cols) == codes))
+
+
+@given(nb=st.sampled_from([256, 512, 1024]), dqb=st.sampled_from([64, 256]))
+@settings(max_examples=10, deadline=None)
+def test_double_quant_scales_roundtrip(nb, dqb):
+    rng = np.random.default_rng(1)
+    scales = jnp.asarray(np.abs(rng.normal(size=(nb,))).astype(np.float32) + 0.1)
+    q, s, o = double_quantize_scales(scales, dqb)
+    back = double_dequantize_scales(q, s, o)
+    # int8 quantization of scales: ≤ 1/127 of the group amax
+    assert float(jnp.max(jnp.abs(back - scales))) < float(jnp.max(scales)) / 64
+
+
+def test_memory_model_matches_storage():
+    for cb in ("nf4", "int8"):
+        for dq in (True, False):
+            cfg = QuantConfig(cb, 64, double_quant=dq)
+            w = jnp.asarray(RNG.normal(size=(256, 512)).astype(np.float32))
+            qt = qtensor_from_dense(w, cfg)
+            assert qt.nbytes() == quant_bytes(w.shape, cfg)
+            assert quant_bytes(w.shape, cfg) < dense_bytes(w.shape)
+
+
+def test_stacked_qtensor_scan_sliceable():
+    ws = jnp.asarray(RNG.normal(size=(4, 128, 256)).astype(np.float32))
+    qt = qtensor_from_dense(ws, QuantConfig("nf4", 64))
+    full = qtensor_to_dense(qt, out_dtype=jnp.float32)
+    _, per_layer = jax.lax.scan(
+        lambda c, q: (c, qtensor_to_dense(q, out_dtype=jnp.float32)), 0, qt
+    )
+    np.testing.assert_allclose(np.asarray(per_layer), np.asarray(full), rtol=1e-6)
+
+
+def test_qtensor_matmul_matches_dense():
+    w = jnp.asarray(RNG.normal(size=(256, 128)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(8, 256)).astype(np.float32))
+    qt = qtensor_from_dense(w, QuantConfig("nf4", 64))
+    y1 = qtensor_matmul(x, qt, use_kernel=False)
+    y2 = x @ qtensor_to_dense(qt, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)

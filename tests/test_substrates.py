@@ -1,0 +1,219 @@
+"""Substrate layers: data, checkpoint, optimizer, trainer, serving, eval."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.quantization import QuantConfig, qtensor_from_dense, qtensor_to_dense
+from repro.data.pipeline import DataConfig, SyntheticInstruct, SyntheticLM
+from repro.eval import tasks as ev
+from repro.models import model_zoo as zoo
+from repro.serve.engine import Engine, ServeConfig
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update, global_norm
+from repro.train.trainer import make_train_step
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+@given(n_shards=st.sampled_from([1, 2, 4]), seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_data_elastic_reshard_equality(n_shards, seed):
+    """The global batch is identical for any host count (elastic restart)."""
+    base = SyntheticLM(DataConfig(100, 16, 8, seed)).next_batch()["tokens"]
+    parts = []
+    for s in range(n_shards):
+        parts.append(
+            SyntheticLM(DataConfig(100, 16, 8, seed, shard=s, n_shards=n_shards))
+            .next_batch()["tokens"]
+        )
+    assert (np.concatenate(parts) == base).all()
+
+
+def test_data_resume_exact():
+    cfg = DataConfig(100, 16, 8, seed=3)
+    a = SyntheticLM(cfg)
+    b0, b1, b2 = a.next_batch(), a.next_batch(), a.next_batch()
+    b = SyntheticLM(DataConfig(100, 16, 8, seed=3))
+    b.load_state_dict({"step": 2, "seed": 3})
+    assert (b.next_batch()["tokens"] == b2["tokens"]).all()
+
+
+def test_instruct_mask_covers_response_only():
+    batch = SyntheticInstruct(DataConfig(100, 32, 4)).next_batch()
+    m = batch["mask"]
+    # mask is a suffix (response region) per row
+    for row in m:
+        nz = np.nonzero(row)[0]
+        assert len(nz) > 0 and (np.diff(nz) == 1).all() and nz[-1] == len(row) - 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint manager
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_keep_n_and_milestones(tmp_path):
+    cm = CheckpointManager(tmp_path, keep_n=2, milestone_every=4)
+    for s in range(1, 9):
+        cm.save(s, {"x": jnp.ones((4,)) * s})
+    names = sorted(p.name for p in tmp_path.glob("step-*"))
+    assert names == ["step-000000004", "step-000000007", "step-000000008"]
+
+
+def test_checkpoint_qtensor_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    w = jnp.asarray(RNG.normal(size=(64, 128)).astype(np.float32))
+    qt = qtensor_from_dense(w, QuantConfig("nf4", 64))
+    cm.save(1, {"q": qt, "dense": w})
+    _, restored, _ = cm.restore()
+    np.testing.assert_allclose(
+        np.asarray(qtensor_to_dense(restored["q"])),
+        np.asarray(qtensor_to_dense(qt)),
+    )
+
+
+def test_checkpoint_atomicity_no_partial_tmp(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, {"x": jnp.ones((2,))})
+    assert not list(tmp_path.glob("tmp-*"))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=100, schedule="constant")
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    opt = adamw_init(params)
+    cfg = OptimizerConfig(lr=1.0, clip_norm=1.0, warmup_steps=0, schedule="constant")
+    grads = {"w": jnp.full((4,), 1e6)}
+    new, _, gnorm = adamw_update(grads, opt, params, cfg)
+    assert float(gnorm) > 1e5  # reported raw
+    assert float(jnp.max(jnp.abs(new["w"]))) < 1.1  # update clipped
+
+
+def test_warmup_cosine_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cfg.lr_at(jnp.asarray(s))) for s in (1, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]  # warmup rising
+    assert lrs[2] >= lrs[3] >= lrs[4]  # cosine decaying
+    assert lrs[4] < 0.05
+
+
+def test_grad_accum_equals_full_batch():
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (8, 32)), jnp.int32),
+    }
+    loss_fn = zoo.train_loss_fn(cfg)
+    opt_cfg = OptimizerConfig(lr=1e-3)
+    s_full = {"params": params, "opt": adamw_init(params)}
+    s_acc = {"params": params, "opt": adamw_init(params)}
+    s_full, m_full = jax.jit(make_train_step(loss_fn, opt_cfg))(s_full, batch)
+    s_acc, m_acc = jax.jit(make_train_step(loss_fn, opt_cfg, grad_accum=4))(s_acc, batch)
+    # microbatch rows see only their own loss normalisation → equal here
+    # because every row has the same token count (mask-free batch)
+    assert abs(float(m_full["loss"]) - float(m_acc["loss"])) < 1e-3
+    worst = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(s_full["params"]), jax.tree.leaves(s_acc["params"]))
+    )
+    assert worst < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_greedy_matches_stepwise_argmax():
+    cfg = zoo.get_smoke_config("qwen2_0_5b")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    prompts = RNG.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=6, ctx_len=32))
+    out = eng.generate(prompts)
+    assert out.shape == (2, 6)
+    # manual stepwise reference
+    step = jax.jit(zoo.serve_step_fn(cfg))
+    caches = zoo.cache_init(cfg)(cfg, 2, 32)
+    pos = 0
+    logits = None
+    for t in range(8):
+        logits, caches = step(params, jnp.asarray(prompts[:, t : t + 1]), caches,
+                              jnp.asarray(pos, jnp.int32))
+        pos += 1
+    want = []
+    for _ in range(6):
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        want.append(np.asarray(nxt))
+        logits, caches = step(params, nxt[:, None], caches, jnp.asarray(pos, jnp.int32))
+        pos += 1
+    np.testing.assert_array_equal(out, np.stack(want, 1))
+
+
+def test_engine_deterministic_greedy():
+    cfg = zoo.get_smoke_config("falcon_mamba_7b")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    prompts = RNG.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=5, ctx_len=16))
+    np.testing.assert_array_equal(eng.generate(prompts), eng.generate(prompts))
+
+
+# ---------------------------------------------------------------------------
+# Eval suite
+# ---------------------------------------------------------------------------
+
+
+def test_eval_chance_level_at_random_init():
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    acc2 = ev.evaluate(cfg, params, "boolq", n=48)  # 2 choices
+    acc4 = ev.evaluate(cfg, params, "arc_c", n=48)  # 4 choices
+    assert 0.2 < acc2 < 0.8
+    assert 0.05 < acc4 < 0.6
+
+
+def test_eval_improves_with_oracle_model():
+    """A model fine-tuned on the task rule should beat chance."""
+    from repro.train.trainer import make_train_step
+
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    spec = ev.TASKS["boolq"]
+    toks, mask, gold = ev.make_examples(spec, cfg.vocab_size, 32, seed=5)
+    # train on the gold continuations
+    gold_rows = toks[np.arange(len(gold)), gold]  # [N, L]
+    batch = {
+        "tokens": jnp.asarray(gold_rows[:, :-1]),
+        "labels": jnp.asarray(gold_rows[:, 1:]),
+        "mask": jnp.asarray(mask[np.arange(len(gold)), gold]),
+    }
+    step = jax.jit(make_train_step(
+        zoo.train_loss_fn(cfg),
+        OptimizerConfig(lr=3e-3, warmup_steps=2, total_steps=80, schedule="constant"),
+    ))
+    state = {"params": params, "opt": adamw_init(params)}
+    for _ in range(80):
+        state, _ = step(state, batch)
+    acc = ev.evaluate(cfg, state["params"], "boolq", n=32, seed=5)
+    assert acc > 0.85, acc
