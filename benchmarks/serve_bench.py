@@ -1,0 +1,117 @@
+"""Serving throughput benchmark: dense vs packed-4 / packed-8 / mixed.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py [--fast]
+
+Measures, per weight format, on the smoke reference model:
+- prefill tokens/s (one chunked batched forward filling the KV caches),
+- decode tokens/s (steady-state generation loop),
+- measured weight bytes (QTensor storage, not a model).
+
+Emits ``BENCH_serve.json`` so future PRs have a perf trajectory. On this
+CPU host the Pallas kernels run in interpret mode, so packed wall-times
+are NOT the TPU story — the stable signals are the dense numbers, the
+relative prefill-vs-decode split, and the byte counts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qpruner import QPrunerConfig, quantize_blocks
+from repro.core.quantization import measured_weight_bytes
+from repro.models import model_zoo as zoo
+from repro.serve.engine import Engine, ServeConfig
+
+
+def _bench_variant(cfg, params, *, batch, prompt_len, new_tokens, reps):
+    scfg = ServeConfig(max_new_tokens=new_tokens, ctx_len=prompt_len + new_tokens)
+    eng = Engine(cfg, params, scfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+    eng.generate(prompts)  # compile
+
+    # prefill-only timing via the jitted cache-filling forward
+    prefill = jax.jit(
+        lambda p, t, c: zoo.prefill_with_caches_fn(cfg)(p, t, c)
+    )
+    caches = zoo.cache_init(cfg)(cfg, batch, scfg.ctx_len)
+    toks = jnp.asarray(prompts)
+    jax.block_until_ready(prefill(params, toks, caches))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(prefill(params, toks, caches))
+    t_prefill = (time.perf_counter() - t0) / reps
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng.generate(prompts)
+    t_total = (time.perf_counter() - t0) / reps
+
+    decode_s = max(t_total - t_prefill, 1e-9)
+    return {
+        "prefill_tok_per_s": batch * prompt_len / t_prefill,
+        "decode_tok_per_s": batch * new_tokens / decode_s,
+        "weight_bytes": measured_weight_bytes(params),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", type=str, default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    qcfg = QPrunerConfig()
+    L = cfg.n_layers
+    batch, prompt_len, new_tokens = (2, 16, 4) if args.fast else (4, 32, 16)
+    reps = 2 if args.fast else 3
+
+    variants = {"dense": params}
+    for name, bits in (
+        ("packed4", np.full(L, 4)),
+        ("packed8", np.full(L, 8)),
+        ("mixed48", np.asarray([8 if l % 2 == 0 else 4 for l in range(L)])),
+    ):
+        variants[name], _, _ = quantize_blocks(
+            cfg, params, bits, qcfg, init_adapters=False, pack=True
+        )
+
+    results = {}
+    for name, p in variants.items():
+        r = _bench_variant(
+            cfg, p, batch=batch, prompt_len=prompt_len,
+            new_tokens=new_tokens, reps=reps,
+        )
+        results[name] = r
+        print(
+            f"{name:8s} prefill {r['prefill_tok_per_s']:9.1f} tok/s  "
+            f"decode {r['decode_tok_per_s']:9.1f} tok/s  "
+            f"weights {r['weight_bytes']/1e6:6.2f} MB"
+        )
+
+    payload = {
+        "arch": cfg.name,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "backend": jax.default_backend(),
+        "kernels": "pallas-interpret" if jax.default_backend() != "tpu" else "pallas",
+        "results": results,
+    }
+    Path(args.out).write_text(json.dumps(payload, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

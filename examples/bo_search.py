@@ -5,8 +5,13 @@
 Runs the full Algorithm 1: MI initialisation → GP/EI proposals under the
 memory constraint → recovery fine-tune + eval per proposal → Pareto
 front of (accuracy, memory), printed as text art like the paper's Fig 3.
+
+``--out bits.json`` writes the winning per-layer allocation as a JSON
+artifact that ``repro.launch.serve --bits-artifact bits.json`` loads and
+serves with real packed QTensor weights.
 """
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -29,6 +34,9 @@ from repro.train.trainer import make_qpruner_train_step, make_train_step
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--out", type=str, default="",
+                    help="write the best per-layer bit allocation as JSON "
+                         "(servable via repro.launch.serve --bits-artifact)")
     args = ap.parse_args()
 
     cfg = zoo.get_smoke_config("llama7b_like").with_(n_layers=8, d_ff=512)
@@ -80,6 +88,16 @@ def main():
         print(f"  mem {mem/1e6:7.3f}MB acc {perf:.3f} |{bar:<40s}|{star}")
     print(f"\nbest: acc={res.best_perf:.3f} mem={res.best_mem/1e6:.3f}MB "
           f"bits8={np.where(res.best_bits==8)[0].tolist()}")
+    if args.out:
+        art = {
+            "arch": cfg.name,
+            "n_layers": int(pipe.cfg.n_layers),
+            "bits": [int(b) for b in res.best_bits],
+            "perf": float(res.best_perf),
+            "mem_bytes": float(res.best_mem),
+        }
+        Path(args.out).write_text(json.dumps(art, indent=2))
+        print(f"wrote bit allocation artifact to {args.out}")
 
 
 if __name__ == "__main__":

@@ -36,7 +36,12 @@ from repro.core.pruning import (
     pruned_param_count,
     unflatten_params,
 )
-from repro.core.quantization import QTensor, QuantConfig, qtensor_from_dense
+from repro.core.quantization import (
+    PackedStack,
+    QTensor,
+    QuantConfig,
+    qtensor_from_dense,
+)
 from repro.models import model_zoo as zoo
 from repro.models import transformer as tf
 
@@ -111,6 +116,16 @@ _QUANTIZABLE = re.compile(
     r"out_proj|dt_proj|x_proj|w_in|w_out)$"
 )
 
+# Leaves eligible for *packed* (executed) quantization: 2-D-per-layer
+# weights of attention-family blocks, which are consumed through
+# repro.models.layers.mm and therefore dispatch to the fused Pallas
+# kernels when handed a QTensor. Expert/SSM/recurrent weights flow
+# through einsums or scans that need dense operands, so the packed path
+# keeps them dense (simulated quantization) — exactly what they execute.
+_PACKABLE = re.compile(
+    r".*/p\d+_(?:attn|moe|localattn)/(?:mlp/)?(?:wq|wk|wv|wo|w_gate|w_up|w_down)$"
+)
+
 
 def _leaf_layer_ids(cfg, path: str, n_stacked: int) -> np.ndarray:
     """Global layer indices covered by a stacked leaf (seg/pos aware).
@@ -162,14 +177,24 @@ def quantize_blocks(
     *,
     init_adapters: bool = True,
     loftq_iters: Optional[int] = None,
+    pack: bool = False,
 ):
     """Per-layer mixed-precision quantization + LoftQ adapter init.
 
-    Every quantizable stacked weight is replaced by its *simulated
-    quantization* at the per-layer bit width (dense storage at runtime;
-    exact byte accounting in MemoryModel — the export path stores packed
-    QTensors via repro.kernels.ops.quantize_weights). LoftQ alternates
+    ``pack=False`` (fine-tune parity path): every quantizable stacked
+    weight is replaced by its *simulated quantization* at the per-layer
+    bit width — dense storage at runtime, scan-homogeneous, exact byte
+    accounting returned as ``mem_bytes``. LoftQ alternates
     Q ← q(W − AB); A,B ← SVD_r(W − Q) per layer, batched over the stack.
+
+    ``pack=True`` (serving path): kernel-eligible weights (see
+    ``_PACKABLE``) are emitted as :class:`PackedStack`s of genuine
+    per-layer ``QTensor``s — packed 4-bit codes / int8 codes + blockwise
+    scales, ``nf4`` vs ``int8`` chosen by the layer's bit — numerically
+    identical to the simulated path (same blocking, same codebooks) but
+    actually holding ≈bits/8 bytes per parameter. Non-eligible leaves
+    stay dense and are accounted dense. ``mem_bytes`` is then the
+    *measured* storage of the returned tree, not a model.
 
     Returns (qparams, adapters, mem_bytes).
     """
@@ -194,33 +219,65 @@ def quantize_blocks(
             squeeze = False
         w32 = w.astype(jnp.float32)
         key, sub = jax.random.split(key)
+        packable = pack and not squeeze and bool(_PACKABLE.match(path))
+        # ``q_src`` is the exact operand the final q_N(·) was applied to —
+        # the packed export quantizes the same matrix per layer so packed
+        # and simulated parameters dequantize identically. When the leaf
+        # will be packed, the simulated q is only materialised if an
+        # adapter init needs it (LoftQ's residual iteration).
         if init_adapters and qcfg.lora.init == "loftq":
             ab = jnp.zeros_like(w32)
             for _ in range(max(iters, 1)):
-                q = _fake_quant_mixed(w32 - ab, bits_vec, qcfg)
+                q_src = w32 - ab
+                q = _fake_quant_mixed(q_src, bits_vec, qcfg)
                 a, b = peft._svd_lowrank(w32 - q, qcfg.lora.rank)
                 ab = a @ b
             ad = {"a": a.astype(qcfg.lora.dtype), "b": b.astype(qcfg.lora.dtype)}
         elif init_adapters and qcfg.lora.init == "pissa":
             a, b = peft._svd_lowrank(w32, qcfg.lora.rank)
-            q = _fake_quant_mixed(w32 - a @ b, bits_vec, qcfg)
+            q_src = w32 - a @ b
+            q = None if packable else _fake_quant_mixed(q_src, bits_vec, qcfg)
             ad = {"a": a.astype(qcfg.lora.dtype), "b": b.astype(qcfg.lora.dtype)}
         elif init_adapters:  # gaussian
-            q = _fake_quant_mixed(w32, bits_vec, qcfg)
+            q_src = w32
+            q = None if packable else _fake_quant_mixed(q_src, bits_vec, qcfg)
             lead = tuple(w.shape[:-2])
             ad = peft.gaussian_init(sub, w.shape[-2], w.shape[-1], qcfg.lora, lead)
         else:
-            q = _fake_quant_mixed(w32, bits_vec, qcfg)
+            q_src = w32
+            q = None if packable else _fake_quant_mixed(q_src, bits_vec, qcfg)
             ad = None
+        if ad is not None and squeeze:
+            ad = {k: v[0] for k, v in ad.items()}
+        if ad is not None:
+            aflat[path] = ad
+
+        if packable:
+            items = []
+            for l in range(n_stacked):
+                b_l = int(bits_vec[l])
+                if b_l >= 16:
+                    items.append(q_src[l].astype(flat[path].dtype))
+                else:
+                    qc = QuantConfig(
+                        qcfg.codebook8 if b_l >= 8 else qcfg.codebook4,
+                        qcfg.quant_block, qcfg.double_quant,
+                    )
+                    items.append(qtensor_from_dense(q_src[l], qc))
+            stack = PackedStack(items)
+            qflat[path] = stack
+            mem += stack.nbytes()
+            continue
+
         q = q.astype(flat[path].dtype)
         if squeeze:
             q = q[0]
-            if ad is not None:
-                ad = {k: v[0] for k, v in ad.items()}
         qflat[path] = q
-        if ad is not None:
-            aflat[path] = ad
-        # exact storage accounting per layer
+        if pack:
+            # stored dense at runtime — account what is actually held
+            mem += q.size * q.dtype.itemsize
+            continue
+        # exact storage accounting per layer (deployed-artifact model)
         per_layer_elems = int(np.prod(w.shape[1:]))
         for b_l in bits_vec:
             if b_l >= 16:

@@ -33,6 +33,7 @@ __all__ = [
     "CODEBOOKS",
     "QuantConfig",
     "QTensor",
+    "PackedStack",
     "make_codebook",
     "quantize",
     "dequantize",
@@ -45,6 +46,7 @@ __all__ = [
     "qtensor_matmul",
     "quant_bytes",
     "dense_bytes",
+    "measured_weight_bytes",
 ]
 
 # ---------------------------------------------------------------------------
@@ -388,6 +390,63 @@ class QTensor:
         if self.dq_scale is None:
             return self.scales
         return double_dequantize_scales(self.scales, self.dq_scale, self.dq_offset)
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedStack:
+    """Per-layer weight stack for *executed* mixed precision.
+
+    A stacked ``[L, in, out]`` leaf whose layers carry different bit
+    widths cannot stay one homogeneous array (4-bit and 8-bit layers
+    have different storage shapes), so the packed serving path stores it
+    as a tuple of per-layer entries — each a :class:`QTensor` (nf4 /
+    int8 at that layer's bit width) or a dense array for 16-bit layers.
+    The model's packed forward indexes it per period instead of
+    ``lax.scan``-slicing; as a pytree it flows through jit unchanged.
+    """
+
+    def __init__(self, items):
+        self.items = tuple(items)
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    def __getitem__(self, i):
+        return self.items[i]
+
+    def __repr__(self) -> str:
+        kinds = ",".join(
+            f"q{it.bits}" if isinstance(it, QTensor) else "dense" for it in self.items
+        )
+        return f"PackedStack[{kinds}]"
+
+    def nbytes(self) -> int:
+        return int(
+            sum(
+                it.nbytes() if isinstance(it, QTensor) else it.size * it.dtype.itemsize
+                for it in self.items
+            )
+        )
+
+    def tree_flatten(self):
+        return self.items, len(self.items)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children)
+
+
+def measured_weight_bytes(tree) -> int:
+    """Actual bytes held by a parameter tree (QTensor-aware, not modeled)."""
+    total = 0
+    for leaf in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, (QTensor, PackedStack))
+    ):
+        if isinstance(leaf, (QTensor, PackedStack)):
+            total += leaf.nbytes()
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return int(total)
 
 
 def qtensor_from_dense(w: jnp.ndarray, cfg: QuantConfig) -> QTensor:

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.nf4_matmul import pad_to_tiles
+
 DEFAULT_BM = 256
 DEFAULT_BK = 256
 DEFAULT_BN = 256
@@ -50,10 +52,19 @@ def int8_matmul(
 ) -> jnp.ndarray:
     M, K = x.shape
     N = codes.shape[1]
+    if N % block:
+        raise ValueError(f"layout: N={N} not divisible by scale block {block}")
     bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
-    if M % bm or K % bk or N % bn or bn % block:
-        raise ValueError(f"tile misalignment: M{M}/{bm} K{K}/{bk} N{N}/{bn}")
-    grid = (M // bm, N // bn, K // bk)
+    if bn % block:
+        bn = block * max(1, bn // block)
+    # pad to the tile grid (zero x-rows / zero scales make the padding
+    # contribute exactly 0 — see nf4_matmul.pad_to_tiles), slice after.
+    x, codes, scales, M, N = pad_to_tiles(
+        x, codes, scales, bm=bm, bk=bk, bn=bn, packed_per_byte=1
+    )
+    Mp, Kp = x.shape
+    Np = codes.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
     out = pl.pallas_call(
         functools.partial(_kernel, block=block),
         grid=grid,
@@ -63,7 +74,7 @@ def int8_matmul(
             pl.BlockSpec((bk, bn // block), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(x, codes, scales)
-    return out.astype(x.dtype)
+    return out[:M, :N].astype(x.dtype)

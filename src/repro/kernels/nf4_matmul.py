@@ -27,6 +27,30 @@ DEFAULT_BK = 256
 DEFAULT_BN = 256
 
 
+def pad_to_tiles(x, codes, scales, *, bm, bk, bn, packed_per_byte=1):
+    """Zero-pad (x [M,K], codes [K,N*/ppb], scales [K,N/block]) to the tile grid.
+
+    Pruned channel counts need not divide the tile sizes; instead of
+    rejecting such shapes we pad every operand up to the next tile
+    multiple. Padding is sound without any in-kernel masking: padded K
+    rows of ``x`` are zero (their products vanish regardless of the
+    garbage codes they meet) and padded N columns carry zero *scales*,
+    so decoded weights there are 0 — the extra output rows/columns are
+    sliced off by the caller. Returns (x, codes, scales, M, N) with M/N
+    the original logical sizes.
+    """
+    M, K = x.shape
+    N = codes.shape[1] * packed_per_byte
+    pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        codes = jnp.pad(codes, ((0, pk), (0, pn // packed_per_byte)))
+        block = N // scales.shape[1]
+        scales = jnp.pad(scales, ((0, pk), (0, pn // block)))
+    return x, codes, scales, M, N
+
+
 def _decode4(codes_u8: jnp.ndarray, book: tuple) -> jnp.ndarray:
     """uint8 nibbles [bk, bn] → fp32 via a static 16-way select chain.
 
@@ -77,13 +101,20 @@ def nf4_matmul(
 ) -> jnp.ndarray:
     M, K = x.shape
     N = codes.shape[1] * 2
+    if N % block:
+        raise ValueError(f"layout: N={N} not divisible by scale block {block}")
     bm = min(bm, M)
     bk = min(bk, K)
     bn = min(bn, N)
-    if M % bm or K % bk or N % bn or bn % block:
-        raise ValueError(f"tile misalignment: M{M}/{bm} K{K}/{bk} N{N}/{bn} block{block}")
+    if bn % block:  # keep the in-tile [bk, bn/block] scale view exact
+        bn = block * max(1, bn // block)
+    x, codes, scales, M, N = pad_to_tiles(
+        x, codes, scales, bm=bm, bk=bk, bn=bn, packed_per_byte=2
+    )
+    Mp, Kp = x.shape
+    Np = codes.shape[1] * 2
     book = tuple(float(v) for v in codebook)  # static — unrolled in-kernel
-    grid = (M // bm, N // bn, K // bk)
+    grid = (Mp // bm, Np // bn, Kp // bk)
     out = pl.pallas_call(
         functools.partial(_kernel, book=book, block=block, n_k=grid[2]),
         grid=grid,
@@ -93,7 +124,7 @@ def nf4_matmul(
             pl.BlockSpec((bk, bn // block), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(x, codes, scales)
-    return out.astype(x.dtype)
+    return out[:M, :N].astype(x.dtype)

@@ -5,9 +5,10 @@ routes to with ``use_kernel=True`` (the TPU path). On CPU hosts the
 kernels run in interpret mode — numerically identical, Python-speed —
 so tests exercise the exact kernel body.
 
-Tile-size misalignment (ragged M, tiny shapes) falls back to the jnp
-oracle; production shapes are 128-aligned by construction (the pruner
-rounds kept groups to 128 lanes — DESIGN.md §3).
+Ragged M/K/N (pruned channel counts, small decode batches) are padded
+up to the tile grid inside the kernels themselves; only layouts the
+kernels cannot express (stacked tensors, N % block != 0) fall back to
+the jnp oracle — numerically identical either way.
 """
 from __future__ import annotations
 
@@ -41,31 +42,40 @@ def _aligned(M, K, N, bm=256, bk=256, bn=256):
     return M % bm == 0 and K % bk == 0 and N % bn == 0 and bn % 64 == 0
 
 
+def _rowwise_layout(qt: QTensor) -> bool:
+    """True when qt's flat block scales reshape to the kernels' [K, N/block]."""
+    K, N = qt.shape
+    return N % qt.cfg.block == 0
+
+
 def qmatmul(x: jnp.ndarray, qt: QTensor) -> jnp.ndarray:
-    """x [..., K] @ deq(qt) [K, N] via the fused kernel (oracle fallback)."""
+    """x [..., K] @ deq(qt) [K, N] via the fused kernel (oracle fallback).
+
+    The kernels pad ragged M/K/N up to the tile grid internally, so the
+    fused path covers pruned (non-128-multiple) channel counts too. The
+    jnp oracle only remains for layouts the kernels cannot express:
+    stacked (>2-D) tensors, sub-byte codebooks other than 4-bit, and
+    scale blocks that straddle weight rows (N % block != 0).
+    """
     if qt.ndim != 2:
         from repro.core.quantization import qtensor_to_dense
 
         return x @ qtensor_to_dense(qt, out_dtype=x.dtype)
     K, N = qt.shape
     x2, lead = _flatten_x(x)
-    M = x2.shape[0]
-    scales = qt.resolved_scales().reshape(K, -1)
-    if qt.bits == 4 and _aligned(M, K, N):
+    scales = qt.resolved_scales().reshape(K, -1) if _rowwise_layout(qt) else None
+    if qt.bits == 4 and scales is not None:
         y = nf4_matmul(
             x2, qt.codes, scales,
             codebook=_book_tuple(qt.cfg.codebook),
             block=qt.cfg.block, interpret=_INTERPRET,
         )
-    elif qt.bits == 8 and _aligned(M, K, N):
+    elif qt.bits == 8 and scales is not None:
         y = int8_matmul(x2, qt.codes, scales, block=qt.cfg.block, interpret=_INTERPRET)
-    else:  # ragged: jnp oracle (numerically identical)
-        if qt.bits == 4:
-            y = _ref.qmatmul4_ref(
-                x2, qt.codes, scales, CODEBOOKS[qt.cfg.codebook], qt.cfg.block
-            )
-        else:
-            y = _ref.qmatmul8_ref(x2, qt.codes, scales, qt.cfg.block)
+    else:  # layout the kernels can't express: jnp oracle (numerically identical)
+        from repro.core.quantization import qtensor_to_dense
+
+        y = x2 @ qtensor_to_dense(qt, out_dtype=x2.dtype)
     return y.reshape(*lead, N).astype(x.dtype)
 
 

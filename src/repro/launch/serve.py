@@ -3,12 +3,22 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 24 [--quantize 4]
 
-``--quantize`` runs the QPruner inference path: weights simulated-
-quantized per layer (uniform here; mixed via launch.bo_search artifacts).
+``--quantize N`` runs the QPruner inference path with REAL packed
+weights: per-layer QTensors (packed 4-bit codes / int8 codes + blockwise
+scales) whose matmuls execute in the fused Pallas dequant kernels
+(interpret mode off-TPU), and whose storage is the measured quantized
+byte count — not a dequantized bf16 copy. ``--simulated`` keeps the old
+quantize-dequantize path (fine-tune parity / debugging).
+
+``--bits-artifact out.json`` loads a mixed-precision allocation produced
+by ``launch.bo_search`` / ``examples/bo_search.py --out`` (a JSON object
+with a per-layer ``"bits"`` list) and serves it packed — QPruner³'s
+search result actually changing the runtime footprint.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -16,6 +26,17 @@ import numpy as np
 
 from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, ServeConfig
+
+
+def _load_bits(path: str) -> np.ndarray:
+    with open(path) as f:
+        art = json.load(f)
+    bits = np.asarray(art["bits"] if isinstance(art, dict) else art, dtype=np.int64)
+    if bits.ndim != 1 or bits.size == 0:
+        raise SystemExit(f"bits artifact {path} must hold a per-layer list")
+    if not set(np.unique(bits)) <= {4, 8, 16}:
+        raise SystemExit(f"bits artifact entries must be in {{4,8,16}}, got {bits}")
+    return bits
 
 
 def main():
@@ -26,21 +47,54 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--quantize", type=int, default=0, choices=(0, 4, 8))
+    ap.add_argument("--quantize", type=int, default=0, choices=(0, 4, 8),
+                    help="uniform bit width (0 = dense)")
+    ap.add_argument("--bits-artifact", type=str, default="",
+                    help="JSON with per-layer 'bits' (from bo_search) — "
+                         "overrides --quantize with a mixed allocation")
+    ap.add_argument("--simulated", action="store_true",
+                    help="simulate quantization (dense storage) instead of "
+                         "serving packed QTensors")
     args = ap.parse_args()
 
     cfg = zoo.get_smoke_config(args.arch) if args.smoke else zoo.get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("use examples/whisper-style driver for enc-dec serving")
+    bits = None
+    if args.bits_artifact:
+        bits = _load_bits(args.bits_artifact)
+        if bits.shape[0] != cfg.n_layers:
+            # bo_search artifacts record their own depth (its driver
+            # shrinks/grows the smoke config); follow the artifact.
+            print(f"bits artifact has {bits.shape[0]} layers; "
+                  f"resizing {cfg.name} from {cfg.n_layers}")
+            cfg = cfg.with_(n_layers=int(bits.shape[0]))
     params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
 
-    if args.quantize:
-        from repro.core.qpruner import QPrunerConfig, quantize_blocks
+    if args.quantize or args.bits_artifact:
+        from repro.core.qpruner import QPrunerConfig, memory_model_of, quantize_blocks
+        from repro.core.quantization import measured_weight_bytes
 
         qcfg = QPrunerConfig()
-        bits = np.full(cfg.n_layers, args.quantize)
-        params, _, mem = quantize_blocks(cfg, params, bits, qcfg, init_adapters=False)
-        print(f"quantized at {args.quantize}-bit → {mem/1e6:.1f} MB weights")
+        if bits is None:
+            bits = np.full(cfg.n_layers, args.quantize)
+        dense_bytes = measured_weight_bytes(params)
+        params, _, mem = quantize_blocks(
+            cfg, params, bits, qcfg, init_adapters=False, pack=not args.simulated
+        )
+        tag = "simulated (dense storage)" if args.simulated else "packed QTensor"
+        hist = {b: int(np.sum(bits == b)) for b in (4, 8, 16) if np.any(bits == b)}
+        print(f"quantized {tag}: bits={hist} layers")
+        if args.simulated:
+            print(f"  modeled artifact size {mem/1e6:.2f} MB "
+                  f"(runtime holds dense {dense_bytes/1e6:.2f} MB)")
+        else:
+            measured = measured_weight_bytes(params)
+            modeled = memory_model_of(cfg, qcfg).weight_bytes(bits)
+            print(f"  measured weight bytes {measured/1e6:.2f} MB "
+                  f"(dense {dense_bytes/1e6:.2f} MB, "
+                  f"{dense_bytes/measured:.2f}x smaller; "
+                  f"MemoryModel says {modeled/1e6:.2f} MB)")
 
     ctx = args.prompt_len + args.new_tokens
     eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,

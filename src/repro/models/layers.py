@@ -26,12 +26,14 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 
-def mm(x, w, ad=None, *, lora_scale: float = 2.0, use_kernel: bool = False):
+def mm(x, w, ad=None, *, lora_scale: float = 2.0, use_kernel: bool = True):
     """``x @ w`` where w may be dense or a QTensor; optional LoRA path.
 
     ``ad`` is ``{'a': [in, r], 'b': [r, out]}`` or None. The adapter path
-    runs in the activation dtype; the quantized base dispatches to the
-    Pallas kernel when ``use_kernel`` (TPU) or the jnp oracle otherwise.
+    runs in the activation dtype; a quantized base dispatches through
+    ``repro.kernels.ops.qmatmul`` — the fused Pallas dequant-matmul
+    (interpret mode off-TPU), with the jnp oracle only for layouts the
+    kernels cannot express. ``use_kernel=False`` forces the oracle.
     """
     from repro.core.quantization import QTensor, qtensor_matmul
 

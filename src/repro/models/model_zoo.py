@@ -40,6 +40,9 @@ __all__ = [
     "axes_fn",
     "train_loss_fn",
     "serve_step_fn",
+    "prefill_fn",
+    "prefill_with_caches_fn",
+    "supports_batched_prefill",
     "cache_init",
     "cache_axes",
     "input_specs",
@@ -140,6 +143,23 @@ def prefill_fn(cfg: ArchConfig):
             adapters=adapters,
         )
         return logits
+    return f
+
+
+def supports_batched_prefill(cfg: ArchConfig) -> bool:
+    """True when prompt processing can be one batched forward that also
+    fills the decode caches (attention-family stacks)."""
+    return cfg.family != "encdec" and _tf.supports_batched_prefill(cfg)
+
+
+def prefill_with_caches_fn(cfg: ArchConfig):
+    """(params, tokens, caches, adapters=None) → (last logits, caches)."""
+    if not supports_batched_prefill(cfg):
+        raise ValueError(f"{cfg.name}: no batched cache-filling prefill")
+
+    def f(params, tokens, caches, adapters=None):
+        return _tf.prefill_with_caches(cfg, params, tokens, caches, adapters=adapters)
+
     return f
 
 

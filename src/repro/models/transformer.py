@@ -55,6 +55,9 @@ __all__ = [
     "decode_cache_axes",
     "decode_step",
     "prefill",
+    "prefill_with_caches",
+    "supports_batched_prefill",
+    "has_packed_params",
 ]
 
 
@@ -138,6 +141,74 @@ def segments_of(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
     if rem:
         segs.append((tuple(cfg.block_pattern[:rem]), 1))
     return segs
+
+
+# ---------------------------------------------------------------------------
+# Packed mixed-precision stacks
+#
+# The serving path may hold quantizable weights as PackedStacks — one
+# QTensor (or dense array for 16-bit layers) per period, possibly at
+# different bit widths. Those are not lax.scan-sliceable, so segments
+# containing them run as an unrolled Python loop with per-period
+# slicing; every block `apply`/`decode` fn already accepts QTensor
+# leaves via layers.mm, so only the iteration strategy changes.
+# ---------------------------------------------------------------------------
+
+
+def _is_packed_leaf(x) -> bool:
+    from repro.core.quantization import PackedStack, QTensor
+
+    return isinstance(x, (PackedStack, QTensor))
+
+
+def has_packed_params(tree) -> bool:
+    """True when any leaf of ``tree`` is a PackedStack / QTensor."""
+    return any(
+        _is_packed_leaf(l) for l in jax.tree.leaves(tree, is_leaf=_is_packed_leaf)
+    )
+
+
+def _slice_stack(tree, i: int):
+    """Period-``i`` slice of a (possibly packed) stacked param subtree."""
+    from repro.core.quantization import PackedStack
+
+    return jax.tree.map(
+        lambda a: a[i], tree, is_leaf=lambda x: isinstance(x, PackedStack)
+    )
+
+
+def _stack_len(seg_params) -> int:
+    from repro.core.quantization import PackedStack
+
+    for leaf in jax.tree.leaves(
+        seg_params, is_leaf=lambda x: isinstance(x, PackedStack)
+    ):
+        return len(leaf) if isinstance(leaf, PackedStack) else int(leaf.shape[0])
+    raise ValueError("empty segment params")
+
+
+def _packed_cached_loop(cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, entry: str):
+    """Unrolled per-period pass over a packed segment WITH caches.
+
+    ``entry`` is the _KIND slot to call — "decode" (returns (x, cache))
+    or "prefill" (returns (x, aux, cache)). Shared by decode_step and
+    prefill_with_caches so the packed iteration cannot diverge between
+    them. Returns (x, stacked new segment caches).
+    """
+    per_period = []
+    for period in range(_stack_len(seg_p)):
+        p_sl = _slice_stack(seg_p, period)
+        c_sl = jax.tree.map(lambda a, i=period: a[i], seg_c)
+        ad_sl = _slice_stack(seg_ad, period) if seg_ad is not None else None
+        new_c = {}
+        for pi, kind in enumerate(pattern):
+            key = f"p{pi}_{kind}"
+            out = _KIND[kind][entry](cfg, p_sl[key], x, c_sl[key], ctx, sub(ad_sl, key))
+            x, nc = (out[0], out[2]) if entry == "prefill" else out
+            x = constrain(x, "batch", "seq_act", None)
+            new_c[key] = nc
+        per_period.append(new_c)
+    return x, jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
 
 
 # ---------------------------------------------------------------------------
@@ -277,8 +348,38 @@ def _qkv(cfg, p, h, ad):
     return q, k, v
 
 
-def apply_attn_block(cfg, p, x, ctx, ad=None, *, window: int = -1, moe=False):
-    """Full-sequence attention block → (x, aux). ctx: {'positions': [S]}."""
+def _fill_attn_cache(cache, fields: dict, win: int):
+    """Populate a decode cache from per-position prompt arrays [B, S, ...].
+
+    Reproduces exactly what S sequential decode writes would leave
+    behind: token p lands in slot ``p % S_c`` for ring (windowed)
+    caches, ``min(p, S_c - 1)`` otherwise; untouched slots keep zeros.
+    """
+    S = fields["k"].shape[1]
+    S_c = cache["k"].shape[1]
+    sl = jnp.arange(S_c)
+    if win > 0 and S > S_c:
+        # last prompt position whose ring slot is ``sl``
+        src = sl + ((S - 1 - sl) // S_c) * S_c
+    elif S > S_c:  # full-attention cache shorter than the prompt: clamp
+        src = jnp.where(sl == S_c - 1, S - 1, sl)
+    else:
+        src = sl
+    valid = (src >= 0) & (src < S)
+    srcc = jnp.clip(src, 0, S - 1)
+    out = {}
+    for name, arr in fields.items():
+        mask = valid.reshape((1, S_c) + (1,) * (arr.ndim - 2))
+        out[name] = jnp.where(mask, arr[:, srcc], jnp.zeros((), arr.dtype))
+    return out
+
+
+def apply_attn_block(cfg, p, x, ctx, ad=None, *, window: int = -1, moe=False, cache=None):
+    """Full-sequence attention block → (x, aux). ctx: {'positions': [S]}.
+
+    With ``cache`` (batched prefill), also fills the decode cache from
+    the block's K/V and returns (x, aux, new_cache).
+    """
     win = cfg.sliding_window if window < 0 else window
     h = _apply_norm(cfg, p["ln1"], x)
     q, k, v = _qkv(cfg, p, h, ad)
@@ -286,6 +387,19 @@ def apply_attn_block(cfg, p, x, ctx, ad=None, *, window: int = -1, moe=False):
         pos = ctx["positions"]
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        if cfg.kv_cache_dtype == "int8":
+            kq, kscale = _quantize_kv(k)
+            vq, vscale = _quantize_kv(v)
+            # decode attends the int8 cache; match its numerics exactly
+            k = (kq.astype(jnp.float32) * kscale[..., None]).astype(k.dtype)
+            v = (vq.astype(jnp.float32) * vscale[..., None]).astype(v.dtype)
+            fields = {"k": kq, "v": vq, "k_scale": kscale, "v_scale": vscale}
+        else:
+            fields = {"k": k.astype(cache["k"].dtype),
+                      "v": v.astype(cache["v"].dtype)}
+        new_cache = _fill_attn_cache(cache, fields, win)
     attn = chunked_attention(
         q, k, v, causal=True, window=win,
         q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
@@ -302,8 +416,13 @@ def apply_attn_block(cfg, p, x, ctx, ad=None, *, window: int = -1, moe=False):
             top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor,
             chunk=cfg.moe_chunk,
         )
-        return x + y, aux
-    return x + _apply_mlp(cfg, p["mlp"], h2, sub(ad, "mlp")), jnp.zeros((), jnp.float32)
+        out = x + y
+    else:
+        out = x + _apply_mlp(cfg, p["mlp"], h2, sub(ad, "mlp"))
+        aux = jnp.zeros((), jnp.float32)
+    if cache is None:
+        return out, aux
+    return out, aux, new_cache
 
 
 # -- decode --
@@ -406,6 +525,9 @@ _KIND = {
         cache=lambda cfg, n, b, s, dt: init_attn_cache(cfg, n, b, s, dt),
         cache_axes=lambda cfg: attn_cache_axes(cfg),
         decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(cfg, p, x, c, ctx, ad),
+        prefill=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block(
+            cfg, p, x, ctx, ad, cache=c
+        ),
     ),
     "moe": dict(
         init=lambda key, cfg, n: init_attn_block(key, cfg, n, moe=True),
@@ -414,6 +536,9 @@ _KIND = {
         cache=lambda cfg, n, b, s, dt: init_attn_cache(cfg, n, b, s, dt),
         cache_axes=lambda cfg: attn_cache_axes(cfg),
         decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(cfg, p, x, c, ctx, ad, moe=True),
+        prefill=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block(
+            cfg, p, x, ctx, ad, moe=True, cache=c
+        ),
     ),
     "localattn": dict(
         init=lambda key, cfg, n: init_attn_block(key, cfg, n),
@@ -427,6 +552,9 @@ _KIND = {
         cache_axes=lambda cfg: attn_cache_axes(cfg),
         decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(
             cfg, p, x, c, ctx, ad, window=cfg.local_window
+        ),
+        prefill=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block(
+            cfg, p, x, ctx, ad, window=cfg.local_window, cache=c
         ),
     ),
     "mamba": dict(
@@ -522,8 +650,29 @@ def _embed(cfg, params, tokens, patches=None, positions=None):
     return x
 
 
+def _segment_loop(cfg, seg_params, pattern, x, ctx, seg_ad=None):
+    """Unrolled per-period forward for packed (mixed-precision) stacks.
+
+    PackedStack leaves hold per-layer QTensors at possibly different bit
+    widths — not scan-sliceable — so the packed serving path trades the
+    O(1)-in-depth HLO of ``lax.scan`` for per-layer kernel dispatch.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    for period in range(_stack_len(seg_params)):
+        p_sl = _slice_stack(seg_params, period)
+        ad_sl = _slice_stack(seg_ad, period) if seg_ad is not None else None
+        for pi, kind in enumerate(pattern):
+            key = f"p{pi}_{kind}"
+            x, a = _KIND[kind]["apply"](cfg, p_sl[key], x, ctx, sub(ad_sl, key))
+            x = constrain(x, "batch", "seq_act", None)
+            aux = aux + a
+    return x, aux
+
+
 def _segment_scan(cfg, seg_params, pattern, x, ctx, seg_ad=None):
     """Scan one segment's stacked pattern over its periods → (x, aux)."""
+    if has_packed_params(seg_params):
+        return _segment_loop(cfg, seg_params, pattern, x, ctx, seg_ad)
 
     def body(carry, xs):
         x, aux = carry
@@ -676,6 +825,13 @@ def decode_step(
         seg_c = caches[f"seg{si}"]
         seg_ad = sub(adapters, f"seg{si}") if adapters is not None else None
 
+        if has_packed_params(seg_p):
+            # packed mixed precision: unrolled loop, per-layer kernels
+            x, new_caches[f"seg{si}"] = _packed_cached_loop(
+                cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, "decode"
+            )
+            continue
+
         def body(carry, xs):
             x = carry
             if seg_ad is not None:
@@ -715,9 +871,84 @@ def prefill(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Prefill forward → (last-position logits [B, V], aux).
 
-    (Cache population during prefill is modelled in serve.engine by a
-    scan of decode steps for correctness tests; the dry-run prefill cell
-    measures the full-sequence forward, which dominates cost.)
+    (Logits-only variant; :func:`prefill_with_caches` additionally
+    populates the decode caches for the serving engine.)
     """
     hidden, aux = forward_hidden(cfg, params, tokens, patches=patches, adapters=adapters)
     return lm_logits(cfg, params, hidden[:, -1]), aux
+
+
+def supports_batched_prefill(cfg: ArchConfig) -> bool:
+    """Attention-family stacks can fill decode caches from one forward;
+    recurrent/SSM blocks need the sequential path for their states."""
+    return cfg.family != "encdec" and all(
+        k in ("attn", "moe", "localattn") for k in cfg.block_pattern
+    )
+
+
+def prefill_with_caches(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    caches: dict,
+    *,
+    patches: Optional[jnp.ndarray] = None,
+    adapters: Optional[dict] = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Whole-prompt prefill → (last-position logits [B, V], filled caches).
+
+    The prompt is processed as ONE chunked batched forward (blocked
+    online-softmax attention — never [S, S]) whose per-block K/V are
+    written into the decode caches, instead of S sequential decode
+    steps. Matches the sequential prefill exactly up to fp summation
+    order. Handles packed (PackedStack/QTensor) parameter stacks via the
+    unrolled per-layer path.
+    """
+    if not supports_batched_prefill(cfg):
+        raise ValueError(
+            f"{cfg.name}: batched prefill needs an attention-only pattern, "
+            f"got {cfg.block_pattern}"
+        )
+    x = _embed(cfg, params, tokens, patches)
+    x = constrain(x, "batch", "seq_act", None)
+    S = x.shape[1]
+    ctx: dict[str, Any] = {"positions": jnp.arange(S), "q_offset": 0}
+    new_caches = {}
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg_p = params[f"seg{si}"]
+        seg_c = caches[f"seg{si}"]
+        seg_ad = sub(adapters, f"seg{si}") if adapters is not None else None
+
+        if has_packed_params(seg_p):
+            x, new_caches[f"seg{si}"] = _packed_cached_loop(
+                cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, "prefill"
+            )
+            continue
+
+        def body(carry, xs):
+            x = carry
+            if seg_ad is not None:
+                p_sl, c_sl, ad_sl = xs
+            else:
+                p_sl, c_sl = xs
+                ad_sl = None
+            new_c = {}
+            for pi, kind in enumerate(pattern):
+                key = f"p{pi}_{kind}"
+                x, _, nc = _KIND[kind]["prefill"](
+                    cfg, p_sl[key], x, c_sl[key], ctx, sub(ad_sl, key)
+                )
+                x = constrain(x, "batch", "seq_act", None)
+                new_c[key] = nc
+            return x, new_c
+
+        xs = (seg_p, seg_c, seg_ad) if seg_ad is not None else (seg_p, seg_c)
+        x, new_seg_c = jax.lax.scan(body, x, xs)
+        new_caches[f"seg{si}"] = new_seg_c
+    fn = params["final_norm"]
+    x = (
+        layer_norm(x, fn["w"], fn["b"], cfg.norm_eps)
+        if cfg.norm == "ln"
+        else rms_norm(x, fn["w"], cfg.norm_eps)
+    )
+    return lm_logits(cfg, params, x[:, -1]), new_caches

@@ -1,9 +1,15 @@
 """Batched serving engine: prefill → decode loop with KV caches.
 
-Production shape: requests are batched, prefill populates caches by
-scanning decode steps (exact-match with the training forward — verified
-in tests), then the decode loop emits one token per step with greedy or
-temperature sampling. jit'd once per (batch, ctx) bucket.
+Production shape: requests are batched, the prompt is processed as ONE
+chunked batched forward that fills the KV caches (attention-family
+stacks; recurrent/SSM models fall back to scanning decode steps), then
+the decode loop emits one token per step with greedy or temperature
+sampling. jit'd once per (batch, ctx) bucket.
+
+Params may be dense, simulated-quantized (dense storage), or *packed*
+mixed precision — PackedStack/QTensor leaves from
+``core.qpruner.quantize_blocks(pack=True)`` — in which case every base
+matmul dispatches to the fused Pallas dequant kernels.
 """
 from __future__ import annotations
 
@@ -37,7 +43,18 @@ class Engine:
         self._step = jax.jit(zoo.serve_step_fn(cfg))
 
     def _prefill(self, tokens: jnp.ndarray, caches):
-        """Feed the prompt token-by-token (scan) → (caches, last_logits)."""
+        """Process the prompt → (caches, pos, last_logits).
+
+        Attention-family models run ONE chunked batched forward that
+        also fills the caches (no per-token scan over the prompt);
+        recurrent/SSM states still need the sequential path.
+        """
+        B, S = tokens.shape
+        if zoo.supports_batched_prefill(self.cfg):
+            logits, caches = zoo.prefill_with_caches_fn(self.cfg)(
+                self.params, tokens, caches, adapters=self.adapters
+            )
+            return caches, jnp.asarray(S, jnp.int32), logits.astype(self.cfg.jdtype)
         step = zoo.serve_step_fn(self.cfg)
 
         def body(carry, t):
@@ -46,7 +63,6 @@ class Engine:
                                   adapters=self.adapters)
             return (caches, pos + 1, logits[:, 0]), None
 
-        B, S = tokens.shape
         init = (caches, jnp.asarray(0, jnp.int32),
                 jnp.zeros((B, self.cfg.vocab_size), self.cfg.jdtype))
         (caches, pos, logits), _ = jax.lax.scan(body, init, tokens.T)

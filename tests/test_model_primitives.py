@@ -1,9 +1,12 @@
-"""Property tests for model primitives: attention, linear scans, MoE."""
+"""Property tests for model primitives: attention, linear scans, MoE.
+
+(Former hypothesis property tests run as seeded parametrize sweeps —
+the offline CI image has no hypothesis.)
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import chunked_attention, decode_attention, moe_layer
 from repro.models.scan_ops import chunked_linear_scan
@@ -26,15 +29,25 @@ def _dense_attention(q, k, v, causal, window):
     return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
 
 
-@given(
-    seq=st.sampled_from([16, 24, 33, 64]),
-    chunks=st.sampled_from([(8, 8), (16, 8), (8, 16)]),
-    causal=st.booleans(),
-    window=st.sampled_from([0, 8]),
-    gqa=st.sampled_from([(4, 4), (4, 2), (4, 1)]),
-    skip=st.booleans(),
+@pytest.mark.parametrize(
+    "seq,chunks,causal,window,gqa,skip",
+    [
+        # full attention, all GQA ratios, mixed chunkings
+        (16, (8, 8), True, 0, (4, 4), False),
+        (24, (16, 8), True, 0, (4, 2), True),
+        (64, (8, 16), True, 0, (4, 1), True),
+        # non-divisible seq (padding path)
+        (33, (8, 8), True, 0, (4, 2), False),
+        (33, (16, 8), False, 0, (4, 4), True),
+        # sliding window, with and without block skip
+        (64, (8, 8), True, 8, (4, 4), False),
+        (64, (16, 8), True, 8, (4, 2), True),
+        (24, (8, 16), False, 8, (4, 1), False),
+        # bidirectional
+        (16, (8, 16), False, 0, (4, 4), False),
+        (64, (16, 8), False, 0, (4, 2), True),
+    ],
 )
-@settings(max_examples=25, deadline=None)
 def test_chunked_attention_matches_dense(seq, chunks, causal, window, gqa, skip):
     Hq, Hkv = gqa
     hd, B = 8, 2
@@ -53,12 +66,13 @@ def test_chunked_attention_matches_dense(seq, chunks, causal, window, gqa, skip)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
 
 
-@given(
-    n=st.sampled_from([8, 16, 64]),
-    chunk=st.sampled_from([4, 8, 16]),
-    trailing=st.sampled_from([(), (3,), (2, 4)]),
+@pytest.mark.parametrize(
+    "n,chunk,trailing",
+    [
+        (8, 4, ()), (8, 8, (3,)), (16, 4, (2, 4)),
+        (16, 16, ()), (64, 8, (3,)), (64, 16, (2, 4)),
+    ],
 )
-@settings(max_examples=20, deadline=None)
 def test_chunked_linear_scan_matches_loop(n, chunk, trailing):
     if n % chunk:
         chunk = n
@@ -120,8 +134,7 @@ def test_moe_capacity_drops_tokens():
     assert float(jnp.max(jnp.abs(y_tight - y_free))) > 1e-3
 
 
-@given(ctx=st.integers(1, 16))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize("ctx", [1, 2, 5, 8, 13, 16])
 def test_decode_attention_respects_ctx_len(ctx):
     rng = np.random.default_rng(2)
     B, S, H, hd = 2, 16, 2, 8

@@ -1,9 +1,12 @@
-"""Quantization core: codebooks, packing, QTensor, memory model."""
+"""Quantization core: codebooks, packing, QTensor, memory model.
+
+(Former hypothesis property tests run as seeded parametrize sweeps —
+the offline CI image has no hypothesis.)
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.quantization import (
     CODEBOOKS,
@@ -47,12 +50,14 @@ def test_nf4_beats_uniform_on_gaussian():
     assert e_nf4 < e_uni
 
 
-@given(
-    bits=st.sampled_from([2, 4, 8]),
-    rows=st.integers(1, 8),
-    cols=st.sampled_from([8, 16, 64]),
+@pytest.mark.parametrize(
+    "bits,rows,cols",
+    [
+        (2, 1, 8), (2, 5, 16), (2, 8, 64),
+        (4, 1, 64), (4, 3, 8), (4, 7, 16),
+        (8, 2, 8), (8, 6, 64), (8, 8, 16),
+    ],
 )
-@settings(max_examples=25, deadline=None)
 def test_pack_unpack_bijective(bits, rows, cols):
     rng = np.random.default_rng(42)
     codes = jnp.asarray(rng.integers(0, 2**bits, (rows, cols)).astype(np.uint8))
@@ -61,8 +66,8 @@ def test_pack_unpack_bijective(bits, rows, cols):
     assert bool(jnp.all(unpack_codes(packed, bits, cols) == codes))
 
 
-@given(nb=st.sampled_from([256, 512, 1024]), dqb=st.sampled_from([64, 256]))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize("nb", [256, 512, 1024])
+@pytest.mark.parametrize("dqb", [64, 256])
 def test_double_quant_scales_roundtrip(nb, dqb):
     rng = np.random.default_rng(1)
     scales = jnp.asarray(np.abs(rng.normal(size=(nb,))).astype(np.float32) + 0.1)

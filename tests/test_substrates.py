@@ -1,9 +1,12 @@
-"""Substrate layers: data, checkpoint, optimizer, trainer, serving, eval."""
+"""Substrate layers: data, checkpoint, optimizer, trainer, serving, eval.
+
+(Former hypothesis property tests run as seeded parametrize sweeps —
+the offline CI image has no hypothesis.)
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.quantization import QuantConfig, qtensor_from_dense, qtensor_to_dense
@@ -22,8 +25,9 @@ RNG = np.random.default_rng(0)
 # ---------------------------------------------------------------------------
 
 
-@given(n_shards=st.sampled_from([1, 2, 4]), seed=st.integers(0, 5))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize(
+    "n_shards,seed", [(1, 0), (2, 0), (2, 3), (4, 1), (4, 5)]
+)
 def test_data_elastic_reshard_equality(n_shards, seed):
     """The global batch is identical for any host count (elastic restart)."""
     base = SyntheticLM(DataConfig(100, 16, 8, seed)).next_batch()["tokens"]
