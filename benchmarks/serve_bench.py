@@ -1,16 +1,26 @@
-"""Serving throughput benchmark: dense vs packed-4 / packed-8 / mixed.
+"""Serving throughput benchmark: dense vs packed weights, paged vs contiguous KV.
 
-  PYTHONPATH=src python benchmarks/serve_bench.py [--fast]
+  PYTHONPATH=src python benchmarks/serve_bench.py [--fast | --quick]
 
 Measures, per weight format, on the smoke reference model:
 - prefill tokens/s (one chunked batched forward filling the KV caches),
 - decode tokens/s (steady-state generation loop),
-- measured weight bytes (QTensor storage, not a model).
+- measured weight bytes (QTensor storage, not a model);
 
-Emits ``BENCH_serve.json`` so future PRs have a perf trajectory. On this
-CPU host the Pallas kernels run in interpret mode, so packed wall-times
-are NOT the TPU story — the stable signals are the dense numbers, the
-relative prefill-vs-decode split, and the byte counts.
+and for the paged continuous-batching engine on a mixed-length request
+set:
+- end-to-end generated tokens/s,
+- ``cache_bytes_live`` — peak bytes of KV blocks actually in use —
+  against ``cache_bytes_contiguous``, what the per-request ctx_len
+  caches of the contiguous engine would allocate for the same load.
+
+Emits ``BENCH_serve.json`` so future PRs have a perf trajectory
+(``scripts/check_bench.py`` diffs it in CI; the committed baseline is
+produced with ``--quick``, the CI configuration). On a CPU host the
+Pallas kernels run in interpret mode, so packed wall-times are NOT the
+TPU story — the stable signals are the dense numbers, the relative
+prefill-vs-decode split, the byte counts, and the paged-vs-contiguous
+cache ratio.
 """
 from __future__ import annotations
 
@@ -29,60 +39,102 @@ import numpy as np
 from repro.core.qpruner import QPrunerConfig, quantize_blocks
 from repro.core.quantization import measured_weight_bytes
 from repro.models import model_zoo as zoo
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import PagedEngine, PagedServeConfig
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def _bench_variant(cfg, params, *, batch, prompt_len, new_tokens, reps):
-    scfg = ServeConfig(max_new_tokens=new_tokens, ctx_len=prompt_len + new_tokens)
-    eng = Engine(cfg, params, scfg)
+    """Prefill and decode timed separately (best-of-reps: the trend check
+    gates on these, so the stable minimum beats a noisy mean)."""
+    ctx = prompt_len + new_tokens
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
-    eng.generate(prompts)  # compile
+    toks = jnp.asarray(prompts)
 
-    # prefill-only timing via the jitted cache-filling forward
     prefill = jax.jit(
         lambda p, t, c: zoo.prefill_with_caches_fn(cfg)(p, t, c)
     )
-    caches = zoo.cache_init(cfg)(cfg, batch, scfg.ctx_len)
-    toks = jnp.asarray(prompts)
-    jax.block_until_ready(prefill(params, toks, caches))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(prefill(params, toks, caches))
-    t_prefill = (time.perf_counter() - t0) / reps
+    caches0 = zoo.cache_init(cfg)(cfg, batch, ctx)
+    logits, caches = jax.block_until_ready(prefill(params, toks, caches0))
+    t_prefill = min(
+        _timed(lambda: jax.block_until_ready(prefill(params, toks, caches0)))
+        for _ in range(reps)
+    )
 
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        eng.generate(prompts)
-    t_total = (time.perf_counter() - t0) / reps
+    # steady-state decode: explicit step loop against the filled caches
+    step = jax.jit(zoo.serve_step_fn(cfg))
+    nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(step(params, nxt, caches, jnp.asarray(prompt_len, jnp.int32)))
 
-    decode_s = max(t_total - t_prefill, 1e-9)
+    def decode_run():
+        c, lg = caches, None
+        for i in range(new_tokens):
+            lg, c = step(params, nxt, c, jnp.asarray(prompt_len + i, jnp.int32))
+        jax.block_until_ready(lg)
+
+    t_decode = min(_timed(decode_run) for _ in range(reps))
     return {
         "prefill_tok_per_s": batch * prompt_len / t_prefill,
-        "decode_tok_per_s": batch * new_tokens / decode_s,
+        "decode_tok_per_s": batch * new_tokens / t_decode,
         "weight_bytes": measured_weight_bytes(params),
+    }
+
+
+def _bench_paged(cfg, params, *, lengths, new_tokens, ctx_len, block_size,
+                 max_batch):
+    """Mixed-length request set through the continuous-batching engine."""
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=ctx_len, block_size=block_size,
+                         max_batch=max_batch),
+    )
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lengths]
+    eng.generate(prompts, new_tokens)  # compile (prefill buckets + step)
+    dt = min(_timed(lambda: eng.generate(prompts, new_tokens))
+             for _ in range(3))
+    st = eng.stats()
+    return {
+        "decode_tok_per_s": len(prompts) * new_tokens / dt,
+        "cache_bytes_live": st["peak_cache_bytes_live"],
+        "cache_bytes_allocated": st["cache_bytes_allocated"],
+        "cache_bytes_contiguous": eng.contiguous_cache_bytes(len(prompts)),
     }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: --fast sizes, best-of-3 timing, skip the "
+                         "uniform packed variants (the committed baseline "
+                         "uses this)")
     ap.add_argument("--out", type=str, default="BENCH_serve.json")
     args = ap.parse_args()
+    fast = args.fast or args.quick
 
     cfg = zoo.get_smoke_config("llama7b_like")
     params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
     qcfg = QPrunerConfig()
     L = cfg.n_layers
-    batch, prompt_len, new_tokens = (2, 16, 4) if args.fast else (4, 32, 16)
-    reps = 2 if args.fast else 3
+    batch, prompt_len, new_tokens = (2, 16, 4) if fast else (4, 32, 16)
+    reps = 3  # best-of-3 keeps the CI trend gate off the noise floor
 
     variants = {"dense": params}
-    for name, bits in (
+    packed_bits = [
         ("packed4", np.full(L, 4)),
         ("packed8", np.full(L, 8)),
         ("mixed48", np.asarray([8 if l % 2 == 0 else 4 for l in range(L)])),
-    ):
+    ]
+    if args.quick:
+        packed_bits = packed_bits[-1:]  # mixed48 covers both kernels
+    for name, bits in packed_bits:
         variants[name], _, _ = quantize_blocks(
             cfg, params, bits, qcfg, init_adapters=False, pack=True
         )
@@ -95,16 +147,32 @@ def main():
         )
         results[name] = r
         print(
-            f"{name:8s} prefill {r['prefill_tok_per_s']:9.1f} tok/s  "
+            f"{name:12s} prefill {r['prefill_tok_per_s']:9.1f} tok/s  "
             f"decode {r['decode_tok_per_s']:9.1f} tok/s  "
             f"weights {r['weight_bytes']/1e6:6.2f} MB"
         )
+
+    lengths = (4, 28, 12, 48) if fast else (8, 56, 24, 96, 40, 112)
+    paged_ctx = (64 if fast else 128)
+    results["paged_mixed"] = r = _bench_paged(
+        cfg, params, lengths=lengths, new_tokens=new_tokens,
+        ctx_len=paged_ctx, block_size=8 if fast else 16,
+        max_batch=min(4, len(lengths)),
+    )
+    print(
+        f"{'paged_mixed':12s} decode  {r['decode_tok_per_s']:9.1f} tok/s  "
+        f"KV live {r['cache_bytes_live']/1e6:6.2f} MB "
+        f"(contiguous would hold {r['cache_bytes_contiguous']/1e6:6.2f} MB — "
+        f"{r['cache_bytes_contiguous']/max(r['cache_bytes_live'],1):.2f}x)"
+    )
 
     payload = {
         "arch": cfg.name,
         "batch": batch,
         "prompt_len": prompt_len,
         "new_tokens": new_tokens,
+        "paged_lengths": list(lengths),
+        "paged_ctx_len": paged_ctx,
         "backend": jax.default_backend(),
         "kernels": "pallas-interpret" if jax.default_backend() != "tpu" else "pallas",
         "results": results,

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Diff a fresh serve-bench run against the committed baseline.
+
+  python scripts/check_bench.py BENCH_serve.json /tmp/new.json
+
+Warn-only trend check: every shared (variant, metric) pair prints its
+ratio. Hard gate: exit 1 only on a >2x regression — throughput
+(``*_tok_per_s``) halved, or footprint (``*_bytes*``) doubled — and only
+when both runs used the same backend (cross-host wall-times are noise,
+byte counts are not).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+HARD_FACTOR = 2.0
+
+
+def _direction(metric: str):
+    """+1 higher-is-better, -1 lower-is-better, 0 informational."""
+    if metric.endswith("_tok_per_s"):
+        return 1
+    if "bytes" in metric:
+        return -1
+    return 0
+
+
+def main(base_path: str, new_path: str) -> int:
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    same_backend = base.get("backend") == new.get("backend")
+    if not same_backend:
+        print(f"[bench] backend changed {base.get('backend')} -> "
+              f"{new.get('backend')}: trend check is warn-only")
+
+    failures = []
+    for variant in sorted(set(base["results"]) & set(new["results"])):
+        b, n = base["results"][variant], new["results"][variant]
+        for metric in sorted(set(b) & set(n)):
+            d = _direction(metric)
+            old_v, new_v = float(b[metric]), float(n[metric])
+            if old_v <= 0 or d == 0:
+                continue
+            ratio = new_v / old_v
+            better = (ratio >= 1.0) if d > 0 else (ratio <= 1.0)
+            arrow = "improved" if better else "regressed"
+            print(f"[bench] {variant}.{metric}: {old_v:.1f} -> {new_v:.1f} "
+                  f"({ratio:.2f}x, {arrow})")
+            hard = (d > 0 and ratio < 1.0 / HARD_FACTOR) or (
+                d < 0 and ratio > HARD_FACTOR
+            )
+            # wall-times only gate within one backend; byte counts always
+            if hard and (same_backend or "bytes" in metric):
+                failures.append(f"{variant}.{metric} {ratio:.2f}x")
+    if failures:
+        print(f"[bench] FAIL: >{HARD_FACTOR:.0f}x regression in: "
+              + ", ".join(failures))
+        return 1
+    print("[bench] trend check passed (warn-only below the "
+          f"{HARD_FACTOR:.0f}x gate)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -1,5 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the verify command from ROADMAP.md, verbatim.
+# Tier-1 CI: the verify command from ROADMAP.md, verbatim, then the
+# serving perf/footprint trend check (warn-only; fails only on a >2x
+# regression vs the committed BENCH_serve.json — see check_bench.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+bench_out="$(mktemp -t bench_serve.XXXXXX.json)"
+trap 'rm -f "$bench_out"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_bench.py \
+    --quick --out "$bench_out"
+python scripts/check_bench.py BENCH_serve.json "$bench_out"

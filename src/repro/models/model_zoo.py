@@ -43,8 +43,13 @@ __all__ = [
     "prefill_fn",
     "prefill_with_caches_fn",
     "supports_batched_prefill",
+    "supports_paged_decode",
     "cache_init",
     "cache_axes",
+    "paged_cache_init",
+    "paged_step_fn",
+    "paged_insert_fn",
+    "paged_logical_len",
     "input_specs",
     "prune_specs",
     "cell_supported",
@@ -167,6 +172,40 @@ def cache_init(cfg: ArchConfig):
     return (
         _ed.encdec_init_caches if cfg.family == "encdec" else _tf.init_decode_caches
     )
+
+
+def supports_paged_decode(cfg: ArchConfig) -> bool:
+    """True when decode can run against paged KV pools (block tables +
+    slot allocator — attention-family stacks only)."""
+    return cfg.family != "encdec" and _tf.supports_paged_decode(cfg)
+
+
+def paged_cache_init(cfg: ArchConfig):
+    """(cfg, num_blocks, block_size) → physical KV block pools."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"{cfg.name}: no paged decode for {cfg.block_pattern}")
+    return _tf.init_paged_caches
+
+
+def paged_step_fn(cfg: ArchConfig):
+    """(params, tokens [B,1], pools, pos [B], pages, adapters=None) →
+    (logits [B,1,V], pools). ``pages`` = {'tables','active','cap'}."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"{cfg.name}: no paged decode for {cfg.block_pattern}")
+    return lambda params, tokens, caches, pos, pages, adapters=None: _tf.decode_step(
+        cfg, params, tokens, caches, pos, adapters=adapters, pages=pages
+    )
+
+
+def paged_insert_fn(cfg: ArchConfig):
+    """(pools, contig_caches, blocks [nmax], prompt_len) → pools."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"{cfg.name}: no paged decode for {cfg.block_pattern}")
+    return _tf.paged_insert_prefill
+
+
+def paged_logical_len(cfg: ArchConfig, ctx_len: int) -> int:
+    return _tf.paged_logical_len(cfg, ctx_len)
 
 
 def cache_axes(cfg: ArchConfig):

@@ -57,6 +57,11 @@ __all__ = [
     "prefill",
     "prefill_with_caches",
     "supports_batched_prefill",
+    "supports_paged_decode",
+    "init_paged_caches",
+    "paged_cache_axes",
+    "paged_insert_prefill",
+    "paged_logical_len",
     "has_packed_params",
 ]
 
@@ -458,6 +463,40 @@ def attn_cache_axes(cfg) -> dict:
     return ax
 
 
+def init_paged_attn_cache(cfg, n: int, num_blocks: int, block_size: int, dtype):
+    """Physical KV block pool: [n, num_blocks, block_size, Hkv, hd].
+
+    Unlike the contiguous cache there is no batch dim — requests map
+    logical positions onto pool blocks through per-request block tables
+    (``_attn_decode_paged``), so allocation tracks live tokens instead of
+    ``batch * ctx_len``. The pool shape is window-independent; windowing
+    only changes the slot arithmetic.
+    """
+    hd = cfg.hd
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((n, num_blocks, block_size, cfg.n_kv_heads, hd), jnp.int8),
+            "v": jnp.zeros((n, num_blocks, block_size, cfg.n_kv_heads, hd), jnp.int8),
+            "k_scale": jnp.zeros((n, num_blocks, block_size, cfg.n_kv_heads), jnp.float32),
+            "v_scale": jnp.zeros((n, num_blocks, block_size, cfg.n_kv_heads), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((n, num_blocks, block_size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n, num_blocks, block_size, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def paged_attn_cache_axes(cfg) -> dict:
+    ax = {
+        "k": ("layers", None, "seq", "kv", None),
+        "v": ("layers", None, "seq", "kv", None),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        ax["k_scale"] = ("layers", None, "seq", "kv")
+        ax["v_scale"] = ("layers", None, "seq", "kv")
+    return ax
+
+
 def _quantize_kv(x):
     """[B, 1, H, hd] → (int8 codes, [B, 1, H] absmax scale/127)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -467,20 +506,8 @@ def _quantize_kv(x):
     return codes, scale
 
 
-def apply_attn_block_decode(cfg, p, x, cache, ctx, ad=None, *, window: int = -1, moe=False):
-    """One-token step. x: [B, 1, d]; cache {'k','v': [B, S, Hkv, hd]}.
-
-    ``ctx['pos']`` — scalar absolute position of this token. Ring-buffer
-    writes when the cache is window-bounded.
-    """
-    win = cfg.sliding_window if window < 0 else window
-    h = _apply_norm(cfg, p["ln1"], x)
-    q, k, v = _qkv(cfg, p, h, ad)
-    pos = ctx["pos"]
-    if cfg.pos_embed == "rope":
-        pvec = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
-        q = apply_rope(q, pvec, cfg.rope_theta)
-        k = apply_rope(k, pvec, cfg.rope_theta)
+def _attn_decode_contig(cfg, q, k, v, cache, pos, win):
+    """Contiguous (per-request ring/clamp) cache write + attend."""
     S = cache["k"].shape[1]
     slot = jnp.where(win > 0, pos % S, jnp.minimum(pos, S - 1))
     if cfg.kv_cache_dtype == "int8":
@@ -492,13 +519,98 @@ def apply_attn_block_decode(cfg, p, x, cache, ctx, ad=None, *, window: int = -1,
         cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
         ctx_len = jnp.minimum(pos + 1, S)
         attn = decode_attention(q, ck, cv, ctx_len, k_scale=cks, v_scale=cvs)
-        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        return attn, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    ctx_len = jnp.minimum(pos + 1, S)
+    attn = decode_attention(q, ck, cv, ctx_len, bf16_dots=cfg.attn_bf16_dots)
+    return attn, {"k": ck, "v": cv}
+
+
+def _attn_decode_paged(cfg, q, k, v, cache, ctx, win):
+    """Block-table cache write + gather + attend (paged KV, §serve).
+
+    ``cache`` holds a physical block POOL shared by every request:
+    {'k','v': [NB, bs, Hkv, hd]} (+ int8 scale pools). ``ctx['pages']``
+    carries the per-request indirection:
+
+    - ``tables`` [B, nmax] int32 — logical block -> physical block id.
+      Unallocated / inactive entries point at physical block 0, which the
+      allocator reserves as a trash block no request ever owns.
+    - ``active`` [B] bool — lanes with a live request. Inactive lanes
+      write into the trash block and read a zero-length context.
+    - ``cap``    [] int32  — logical context capacity per request.
+
+    The ring-buffer slot mapping of the contiguous cache generalises
+    directly: the logical slot ``pos % S_c`` (windowed) or
+    ``min(pos, S_c-1)`` (full) is split into (block, offset) and routed
+    through the table. Gathered slots beyond ``ctx_len`` are masked to
+    NEG_INF before the softmax, so stale pool content contributes an
+    exact 0 — decode is token-identical to the contiguous path.
+    """
+    pg = ctx["pages"]
+    tables = pg["tables"]
+    active = pg["active"]
+    cap = jnp.asarray(pg["cap"], jnp.int32)
+    bs = cache["k"].shape[1]
+    B = q.shape[0]
+    posv = jnp.broadcast_to(jnp.reshape(ctx["pos"], (-1,)), (B,)).astype(jnp.int32)
+    if win > 0:
+        S_c = jnp.minimum(cap, win)
+        slot = posv % S_c
     else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        ctx_len = jnp.minimum(pos + 1, S)
-        attn = decode_attention(q, ck, cv, ctx_len, bf16_dots=cfg.attn_bf16_dots)
-        new_cache = {"k": ck, "v": cv}
+        S_c = cap
+        slot = jnp.minimum(posv, S_c - 1)
+    lb, off = slot // bs, slot % bs
+    pb = jnp.take_along_axis(tables, lb[:, None], axis=1)[:, 0]
+    ctx_len = jnp.where(active, jnp.minimum(posv + 1, S_c), 0)
+
+    def fetch(pool):  # [NB, bs, ...] -> per-request [B, nmax*bs, ...]
+        g = jnp.take(pool, tables, axis=0)
+        return g.reshape((B, tables.shape[1] * bs) + g.shape[3:])
+
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = cache["k"].at[pb, off].set(kq[:, 0])
+        cv = cache["v"].at[pb, off].set(vq[:, 0])
+        cks = cache["k_scale"].at[pb, off].set(ks[:, 0])
+        cvs = cache["v_scale"].at[pb, off].set(vs[:, 0])
+        attn = decode_attention(
+            q, fetch(ck), fetch(cv), ctx_len,
+            k_scale=fetch(cks), v_scale=fetch(cvs),
+        )
+        return attn, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    ck = cache["k"].at[pb, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[pb, off].set(v[:, 0].astype(cache["v"].dtype))
+    attn = decode_attention(
+        q, fetch(ck), fetch(cv), ctx_len, bf16_dots=cfg.attn_bf16_dots
+    )
+    return attn, {"k": ck, "v": cv}
+
+
+def apply_attn_block_decode(cfg, p, x, cache, ctx, ad=None, *, window: int = -1, moe=False):
+    """One-token step. x: [B, 1, d]; cache {'k','v': [B, S, Hkv, hd]}.
+
+    ``ctx['pos']`` — absolute position of this token: a scalar for the
+    contiguous cache, a per-request [B] vector when ``ctx['pages']``
+    selects the paged path (continuous batching decodes requests at
+    unequal positions). Ring-buffer writes when window-bounded.
+    """
+    win = cfg.sliding_window if window < 0 else window
+    h = _apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p, h, ad)
+    pos = ctx["pos"]
+    if cfg.pos_embed == "rope":
+        pvec = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1)), (x.shape[0], 1)
+        )
+        q = apply_rope(q, pvec, cfg.rope_theta)
+        k = apply_rope(k, pvec, cfg.rope_theta)
+    if ctx.get("pages") is not None:
+        attn, new_cache = _attn_decode_paged(cfg, q, k, v, cache, ctx, win)
+    else:
+        attn, new_cache = _attn_decode_contig(cfg, q, k, v, cache, pos, win)
     B = x.shape[0]
     x = x + mm(attn.reshape(B, 1, -1), p["wo"], sub(ad, "wo"))
     h2 = _apply_norm(cfg, p["ln2"], x)
@@ -524,6 +636,9 @@ _KIND = {
         apply=lambda cfg, p, x, ctx, ad=None: apply_attn_block(cfg, p, x, ctx, ad),
         cache=lambda cfg, n, b, s, dt: init_attn_cache(cfg, n, b, s, dt),
         cache_axes=lambda cfg: attn_cache_axes(cfg),
+        paged_cache=init_paged_attn_cache,
+        paged_cache_axes=paged_attn_cache_axes,
+        window=lambda cfg: cfg.sliding_window,
         decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(cfg, p, x, c, ctx, ad),
         prefill=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block(
             cfg, p, x, ctx, ad, cache=c
@@ -535,6 +650,9 @@ _KIND = {
         apply=lambda cfg, p, x, ctx, ad=None: apply_attn_block(cfg, p, x, ctx, ad, moe=True),
         cache=lambda cfg, n, b, s, dt: init_attn_cache(cfg, n, b, s, dt),
         cache_axes=lambda cfg: attn_cache_axes(cfg),
+        paged_cache=init_paged_attn_cache,
+        paged_cache_axes=paged_attn_cache_axes,
+        window=lambda cfg: cfg.sliding_window,
         decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(cfg, p, x, c, ctx, ad, moe=True),
         prefill=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block(
             cfg, p, x, ctx, ad, moe=True, cache=c
@@ -550,6 +668,9 @@ _KIND = {
             cfg, n, b, s, dt, window=cfg.local_window
         ),
         cache_axes=lambda cfg: attn_cache_axes(cfg),
+        paged_cache=init_paged_attn_cache,
+        paged_cache_axes=paged_attn_cache_axes,
+        window=lambda cfg: cfg.local_window,
         decode=lambda cfg, p, x, c, ctx, ad=None: apply_attn_block_decode(
             cfg, p, x, c, ctx, ad, window=cfg.local_window
         ),
@@ -804,21 +925,119 @@ def decode_cache_axes(cfg: ArchConfig) -> dict:
     return axes
 
 
+# -- paged KV (block tables + physical pools — §serve) --
+
+
+def supports_paged_decode(cfg: ArchConfig) -> bool:
+    """Paged KV needs every block to be an attention kind — recurrent/SSM
+    states are O(1) per request and gain nothing from paging."""
+    return cfg.family != "encdec" and all(
+        k in ("attn", "moe", "localattn") for k in cfg.block_pattern
+    )
+
+
+def paged_logical_len(cfg: ArchConfig, ctx_len: int) -> int:
+    """Largest logical cache length any block kind needs at capacity
+    ``ctx_len`` (windowed kinds ring-bound to ``min(ctx_len, window)``).
+    Block tables are sized to ``ceil(paged_logical_len / block_size)``."""
+    L = 0
+    for pattern, _ in segments_of(cfg):
+        for kind in pattern:
+            win = _KIND[kind]["window"](cfg)
+            L = max(L, min(ctx_len, win) if win > 0 else ctx_len)
+    return L
+
+
+def init_paged_caches(cfg: ArchConfig, num_blocks: int, block_size: int) -> dict:
+    """Physical block pools mirroring the ``init_decode_caches`` structure.
+
+    One pool per block kind per segment, shared by all requests; the
+    per-request block table (host-side, ``serve.scheduler``) provides the
+    logical→physical indirection. All kinds share one table, so every
+    pool is sized to the same ``num_blocks``.
+    """
+    if not supports_paged_decode(cfg):
+        raise ValueError(
+            f"{cfg.name}: paged decode needs an attention-only pattern, "
+            f"got {cfg.block_pattern}"
+        )
+    caches = {}
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"p{pi}_{kind}"] = _KIND[kind]["paged_cache"](
+                cfg, n, num_blocks, block_size, cfg.jdtype
+            )
+        caches[f"seg{si}"] = seg
+    return caches
+
+
+def paged_cache_axes(cfg: ArchConfig) -> dict:
+    axes = {}
+    for si, (pattern, n) in enumerate(segments_of(cfg)):
+        seg = {}
+        for pi, kind in enumerate(pattern):
+            seg[f"p{pi}_{kind}"] = _KIND[kind]["paged_cache_axes"](cfg)
+        axes[f"seg{si}"] = seg
+    return axes
+
+
+def paged_insert_prefill(pools: dict, caches: dict, blocks: jnp.ndarray,
+                         prompt_len: jnp.ndarray) -> dict:
+    """Copy one request's contiguous prefilled cache into the pools.
+
+    ``caches`` is a batch-1 ``init_decode_caches`` tree filled by
+    ``prefill_with_caches`` (or sequential decode steps); ``blocks``
+    [nmax] int32 is the request's block table row. Slots are re-blocked
+    ``slot -> (blocks[slot // bs], slot % bs)`` so the gather in
+    ``_attn_decode_paged`` reproduces the contiguous slot order exactly.
+
+    Only blocks covering written slots (``ceil(min(prompt_len, S_c)/bs)``
+    per kind — lazy allocation means later blocks may not exist yet) are
+    targeted; the rest scatter into trash block 0. jit-stable across
+    prompt lengths: ``prompt_len`` is traced, shapes come from the trees.
+    """
+
+    def ins(pool, contig):
+        n, _, bs = pool.shape[:3]
+        S_c = contig.shape[2]
+        nb = -(-S_c // bs)
+        x = contig[:, 0]
+        pad = nb * bs - S_c
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        x = x.reshape((n, nb, bs) + x.shape[2:])
+        na = (jnp.minimum(prompt_len, S_c) + bs - 1) // bs
+        ids = jnp.where(jnp.arange(nb) < na, blocks[:nb], 0)
+        return pool.at[:, ids].set(x)
+
+    return jax.tree.map(ins, pools, caches)
+
+
 def decode_step(
     cfg: ArchConfig,
     params: dict,
     tokens: jnp.ndarray,  # [B, 1]
     caches: dict,
-    pos: jnp.ndarray,  # scalar int32 — absolute position
+    pos: jnp.ndarray,  # scalar int32 — absolute position ([B] when paged)
     *,
     adapters: Optional[dict] = None,
+    pages: Optional[dict] = None,
 ) -> tuple[jnp.ndarray, dict]:
-    """One decode step → (logits [B, 1, V], updated caches)."""
+    """One decode step → (logits [B, 1, V], updated caches).
+
+    With ``pages`` ({'tables','active','cap'} — see ``_attn_decode_paged``)
+    ``caches`` are physical block pools, ``pos`` is a per-request [B]
+    vector, and writes/reads go through the block tables. Same params,
+    same numerics, different cache indexing.
+    """
     x = jnp.take(params["embed"]["tok"], tokens, axis=0)
     x = constrain(x, "batch", "seq_act", None)
     if cfg.pos_embed == "learned":
-        x = x + params["embed"]["pos"][jnp.minimum(pos, cfg.max_pos - 1)][None, None]
-    ctx = {"pos": pos}
+        pidx = jnp.minimum(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)),
+                           cfg.max_pos - 1)
+        x = x + jnp.take(params["embed"]["pos"], pidx, axis=0)[:, None]
+    ctx = {"pos": pos, "pages": pages}
     new_caches = {}
     for si, (pattern, n) in enumerate(segments_of(cfg)):
         seg_p = params[f"seg{si}"]

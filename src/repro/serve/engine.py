@@ -4,12 +4,33 @@ Production shape: requests are batched, the prompt is processed as ONE
 chunked batched forward that fills the KV caches (attention-family
 stacks; recurrent/SSM models fall back to scanning decode steps), then
 the decode loop emits one token per step with greedy or temperature
-sampling. jit'd once per (batch, ctx) bucket.
+sampling.
+
+Compiled-shape discipline: ``generate()`` buckets its inputs so varying
+``np.ndarray`` prompt shapes hit a BOUNDED set of compiled programs
+instead of retracing per (batch, seq):
+
+- batch is padded to the next power of two (pad rows repeat row 0 and
+  are sliced off the output);
+- the prompt is split at the largest ``prefill_chunk`` multiple: the
+  head goes through the batched prefill, the remainder (< chunk tokens)
+  is right-padded to exactly ``chunk`` and replayed through the
+  one-token step fn under a ``rest_len`` mask — so every prompt length
+  in ``[k*chunk, (k+1)*chunk)`` shares one compiled program.
+
+``Engine.n_traces`` counts ``_generate`` retraces (one per shape bucket;
+regression-tested). Exact for greedy decoding; with ``temperature > 0``
+the sampled draws depend on the padded batch shape (the categorical
+noise tensor is shaped [B_pad, V]), which is still deterministic per
+bucket.
 
 Params may be dense, simulated-quantized (dense storage), or *packed*
 mixed precision — PackedStack/QTensor leaves from
 ``core.qpruner.quantize_blocks(pack=True)`` — in which case every base
 matmul dispatches to the fused Pallas dequant kernels.
+
+For admitting/retiring requests *between* decode steps against a paged
+KV cache, see ``serve.scheduler.PagedEngine``.
 """
 from __future__ import annotations
 
@@ -32,6 +53,9 @@ class ServeConfig:
     temperature: float = 0.0  # 0 → greedy
     ctx_len: int = 512
     seed: int = 0
+    # prompt-length bucketing granularity: prompts sharing
+    # floor(S / prefill_chunk) hit the same compiled program
+    prefill_chunk: int = 8
 
 
 class Engine:
@@ -41,6 +65,7 @@ class Engine:
         self.adapters = adapters
         self.scfg = serve_cfg
         self._step = jax.jit(zoo.serve_step_fn(cfg))
+        self.n_traces = 0  # _generate compilations (one per shape bucket)
 
     def _prefill(self, tokens: jnp.ndarray, caches):
         """Process the prompt → (caches, pos, last_logits).
@@ -69,10 +94,37 @@ class Engine:
         return caches, pos, logits
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _generate(self, tokens):
-        caches = zoo.cache_init(self.cfg)(self.cfg, tokens.shape[0], self.scfg.ctx_len)
-        caches, pos, logits = self._prefill(tokens, caches)
+    def _generate(self, tokens_main, tokens_rest, rest_len):
+        self.n_traces += 1  # python body runs once per compiled shape
+        B = tokens_rest.shape[0]
+        caches = zoo.cache_init(self.cfg)(self.cfg, B, self.scfg.ctx_len)
+        if tokens_main.shape[1] > 0:
+            caches, pos, logits = self._prefill(tokens_main, caches)
+        else:
+            pos = jnp.asarray(0, jnp.int32)
+            logits = jnp.zeros((B, self.cfg.vocab_size), self.cfg.jdtype)
         step = zoo.serve_step_fn(self.cfg)
+
+        if tokens_rest.shape[1] > 0:
+            # prompt tail, right-padded to the chunk width: replay
+            # through the step fn, freezing state once i >= rest_len so
+            # the pad tokens are inert.
+            def rest_body(carry, inp):
+                t, i = inp
+
+                def run(c):
+                    cc, p, _ = c
+                    lg, cc = step(self.params, t[:, None], cc, p,
+                                  adapters=self.adapters)
+                    return (cc, p + 1, lg[:, 0].astype(self.cfg.jdtype))
+
+                return jax.lax.cond(i < rest_len, run, lambda c: c, carry), None
+
+            (caches, pos, logits), _ = jax.lax.scan(
+                rest_body, (caches, pos, logits),
+                (tokens_rest.T, jnp.arange(tokens_rest.shape[1])),
+            )
+
         key = jax.random.PRNGKey(self.scfg.seed)
 
         def body(carry, i):
@@ -96,4 +148,22 @@ class Engine:
 
     def generate(self, prompts: np.ndarray) -> np.ndarray:
         """prompts: [B, S] int32 → [B, max_new_tokens] int32."""
-        return np.asarray(self._generate(jnp.asarray(prompts, jnp.int32)))
+        prompts = np.asarray(prompts, np.int32)
+        B, S = prompts.shape
+        Bb = 1 << max(B - 1, 0).bit_length()  # next power of two ≥ B
+        if Bb > B:
+            prompts = np.concatenate(
+                [prompts, np.repeat(prompts[:1], Bb - B, axis=0)], axis=0
+            )
+        chunk = max(1, self.scfg.prefill_chunk)
+        s_main = (S // chunk) * chunk
+        rest_len = S - s_main
+        rest = prompts[:, s_main:]
+        if rest_len:
+            rest = np.pad(rest, ((0, 0), (0, chunk - rest_len)))
+        out = self._generate(
+            jnp.asarray(prompts[:, :s_main]),
+            jnp.asarray(rest),
+            jnp.asarray(rest_len, jnp.int32),
+        )
+        return np.asarray(out)[:B]

@@ -1,0 +1,397 @@
+"""Continuous batching over a paged KV cache.
+
+``serve.engine.Engine`` allocates one contiguous ``ctx_len``-deep cache
+per request and runs a whole batch in lockstep — short prompts pay for
+the longest, and a new request waits for the batch to drain. This module
+replaces both halves:
+
+- **Paged KV cache** — KV lives in fixed-size physical blocks
+  (``transformer.init_paged_caches``); a host-side :class:`BlockAllocator`
+  hands blocks to requests on demand and a per-request block table maps
+  logical slots to physical blocks. Allocation tracks live tokens, not
+  ``batch * ctx_len``.
+- **Continuous batching** — :class:`PagedEngine` keeps ``max_batch``
+  decode *lanes*. Between decode steps it admits queued requests into
+  free lanes (per-request prefill → block-table insert) and retires
+  finished ones, all against ONE jitted decode step of fixed shape — no
+  recompile as the request mix changes (``decode_traces`` counts).
+
+Exactness: lanes are independent — attention gathers through each lane's
+own table, inactive lanes read a zero-length context and write into the
+reserved trash block 0 — so each request's tokens are identical to
+running it alone through the sequential engine (``tests/serving_oracle``
+asserts token-exact agreement). Greedy decoding only: temperature
+sampling across a changing lane mix has no per-request-stable RNG
+semantics.
+
+If the pool runs dry while a request grows, the youngest active request
+is preempted by *recompute* (vLLM-style): its blocks are freed and it is
+requeued with ``prompt + emitted`` as the new prompt, which re-prefills
+to the exact same continuation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo as zoo
+
+__all__ = ["PagedServeConfig", "BlockAllocator", "Request", "PagedEngine"]
+
+TRASH_BLOCK = 0  # physical block 0: sink for inactive / unallocated writes
+
+
+@dataclasses.dataclass
+class PagedServeConfig:
+    ctx_len: int = 512  # per-request logical KV capacity (prompt + new)
+    block_size: int = 16
+    num_blocks: int = 0  # 0 → auto: max_batch full contexts + trash
+    max_batch: int = 4  # concurrent decode lanes
+    max_new_tokens: int = 32  # default generation budget per request
+    prefill_chunk: int = 8  # prompt bucketing (same scheme as Engine)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # current prompt; grows on preemption-recompute
+    max_new: int
+    emitted: list = dataclasses.field(default_factory=list)
+    lane: int = -1
+    blocks: list = dataclasses.field(default_factory=list)
+    admit_seq: int = -1
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.emitted)
+
+
+class BlockAllocator:
+    """Host-side slot allocator: a free list over physical block ids.
+
+    Block 0 (:data:`TRASH_BLOCK`) is reserved and never handed out —
+    inactive lanes and not-yet-allocated table entries point there.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one block besides the trash block")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))  # pop() → low ids first
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """n fresh block ids, or None (all-or-nothing) if the pool is dry."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, ids: list[int]) -> None:
+        self._free.extend(ids)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:  # excluding the trash block
+        return self.num_blocks - 1 - len(self._free)
+
+
+class PagedEngine:
+    """Continuous-batching serving engine over paged KV pools."""
+
+    def __init__(self, cfg, params, pcfg: PagedServeConfig, adapters=None):
+        if not zoo.supports_paged_decode(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged serving needs an attention-only "
+                f"pattern, got {cfg.block_pattern}"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.pcfg = pcfg
+        self.adapters = adapters
+        bs = pcfg.block_size
+        self.cap = pcfg.ctx_len
+        self.logical_len = zoo.paged_logical_len(cfg, self.cap)
+        self.nmax = -(-self.logical_len // bs)  # table width (blocks/request)
+        nb = pcfg.num_blocks or (pcfg.max_batch * self.nmax + 1)
+        self.allocator = BlockAllocator(nb)
+        self.pools = zoo.paged_cache_init(cfg)(cfg, nb, bs)
+        self.block_bytes = sum(
+            leaf.nbytes // nb for leaf in jax.tree.leaves(self.pools)
+        )
+        M = pcfg.max_batch
+        self.tables = np.zeros((M, self.nmax), np.int32)
+        self.pos = np.zeros((M,), np.int32)
+        self.active = np.zeros((M,), bool)
+        self.last_tok = np.zeros((M,), np.int32)
+        self.lanes: list[Optional[Request]] = [None] * M
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self._admit_seq = 0
+        self.decode_steps = 0
+        self.preemptions = 0
+        self.peak_blocks_live = 0
+        # trace counters: the python body of a jitted fn runs once per
+        # compiled shape, so these count compilations, not calls.
+        self.decode_traces = 0
+        self.prefill_traces = 0
+
+        pstep = zoo.paged_step_fn(cfg)
+        cap = self.cap
+
+        def _step(params, tokens, pools, tables, pos, active):
+            self.decode_traces += 1
+            pages = {"tables": tables, "active": active,
+                     "cap": jnp.asarray(cap, jnp.int32)}
+            logits, pools = pstep(params, tokens, pools, pos, pages,
+                                  adapters=adapters)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            return nxt, pools
+
+        # donate the pools: decode must update the KV blocks in place, not
+        # copy the whole pool per token (no-op on backends w/o donation)
+        self._step = jax.jit(_step, donate_argnums=(2,))
+
+        sstep = zoo.serve_step_fn(cfg)
+        prefill = zoo.prefill_with_caches_fn(cfg)
+
+        def _prefill(params, tok_main, tok_rest, rest_len):
+            # identical bucketing scheme to Engine._generate so the
+            # sequential oracle is bit-identical per request
+            self.prefill_traces += 1
+            caches = zoo.cache_init(cfg)(cfg, 1, cap)
+            if tok_main.shape[1] > 0:
+                logits, caches = prefill(params, tok_main, caches,
+                                         adapters=adapters)
+                pos = jnp.asarray(tok_main.shape[1], jnp.int32)
+                logits = logits.astype(cfg.jdtype)
+            else:
+                pos = jnp.asarray(0, jnp.int32)
+                logits = jnp.zeros((1, cfg.vocab_size), cfg.jdtype)
+            if tok_rest.shape[1] > 0:
+                def body(carry, inp):
+                    t, i = inp
+
+                    def run(c):
+                        cc, p, _ = c
+                        lg, cc = sstep(params, t[:, None], cc, p,
+                                       adapters=adapters)
+                        return (cc, p + 1, lg[:, 0].astype(cfg.jdtype))
+
+                    return jax.lax.cond(i < rest_len, run, lambda c: c, carry), None
+
+                (caches, pos, logits), _ = jax.lax.scan(
+                    body, (caches, pos, logits),
+                    (tok_rest.T, jnp.arange(tok_rest.shape[1])),
+                )
+            return logits, caches
+
+        self._prefill = jax.jit(_prefill)
+        self._insert = jax.jit(zoo.paged_insert_fn(cfg), donate_argnums=(0,))
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_new = (self.pcfg.max_new_tokens if max_new_tokens is None
+                   else max_new_tokens)
+        if max_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new}")
+        if prompt.size + max_new > self.cap:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"ctx_len {self.cap}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new))
+        return rid
+
+    def _admit(self) -> int:
+        admitted = 0
+        for lane in range(self.pcfg.max_batch):
+            if self.lanes[lane] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            S = int(req.prompt.size)
+            na = -(-min(S, self.logical_len) // self.pcfg.block_size)
+            blocks = self.allocator.alloc(na)
+            if blocks is None:
+                break  # wait for retirements to free blocks
+            self.queue.popleft()
+            chunk = max(1, self.pcfg.prefill_chunk)
+            s_main = (S // chunk) * chunk
+            rest_len = S - s_main
+            rest = req.prompt[None, s_main:]
+            if rest_len:
+                rest = np.pad(rest, ((0, 0), (0, chunk - rest_len)))
+            logits, caches = self._prefill(
+                self.params,
+                jnp.asarray(req.prompt[None, :s_main]),
+                jnp.asarray(rest),
+                jnp.asarray(rest_len, jnp.int32),
+            )
+            brow = np.zeros((self.nmax,), np.int32)
+            brow[:na] = blocks
+            self.pools = self._insert(
+                self.pools, caches, jnp.asarray(brow), jnp.asarray(S, jnp.int32)
+            )
+            req.lane, req.blocks = lane, list(blocks)
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            req.emitted.append(int(np.argmax(np.asarray(logits[0]))))
+            self.lanes[lane] = req
+            self.tables[lane] = brow
+            self.pos[lane] = S
+            self.active[lane] = True
+            self.last_tok[lane] = req.emitted[-1]
+            admitted += 1
+            if req.remaining <= 0:
+                self._retire(lane)
+        if admitted:
+            self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
+        return admitted
+
+    def _retire(self, lane: int) -> None:
+        req = self.lanes[lane]
+        self.allocator.release(req.blocks)
+        req.blocks = []
+        req.lane = -1
+        self.lanes[lane] = None
+        self.active[lane] = False
+        self.tables[lane] = TRASH_BLOCK
+        self.done[req.rid] = np.asarray(req.emitted, np.int32)
+
+    def _preempt(self, lane: int) -> None:
+        """Evict by recompute: free the lane, requeue prompt + emitted."""
+        req = self.lanes[lane]
+        self.allocator.release(req.blocks)
+        req.blocks = []
+        req.lane = -1
+        req.prompt = np.concatenate(
+            [req.prompt, np.asarray(req.emitted, np.int32)]
+        )
+        self.lanes[lane] = None
+        self.active[lane] = False
+        self.tables[lane] = TRASH_BLOCK
+        self.queue.appendleft(req)
+        self.preemptions += 1
+
+    def _youngest_active(self) -> Optional[int]:
+        lanes = [l for l, r in enumerate(self.lanes) if r is not None]
+        if not lanes:
+            return None
+        return max(lanes, key=lambda l: self.lanes[l].admit_seq)
+
+    def _grow(self, lane: int) -> bool:
+        """Ensure the lane's table covers its next write position.
+
+        Returns False if the lane itself was preempted to make room.
+        """
+        req = self.lanes[lane]
+        bs = self.pcfg.block_size
+        needed = min(int(self.pos[lane]), self.logical_len - 1) // bs + 1
+        while len(req.blocks) < needed:
+            got = self.allocator.alloc(1)
+            if got is None:
+                victim = self._youngest_active()
+                self._preempt(victim)
+                if victim == lane:
+                    return False
+                continue
+            req.blocks.extend(got)
+            self.tables[lane, len(req.blocks) - 1] = got[0]
+        return True
+
+    # -- scheduling loop ----------------------------------------------------
+
+    def step(self) -> bool:
+        """One scheduler iteration: admit → grow → batched decode → retire.
+
+        Returns True while there is (or was) work this iteration.
+        """
+        admitted = self._admit()
+        if not np.any(self.active):
+            if self.queue and not admitted:
+                need = self.queue[0]
+                raise RuntimeError(
+                    f"KV pool too small: request {need.rid} needs "
+                    f"{-(-min(need.prompt.size, self.logical_len) // self.pcfg.block_size)} "
+                    f"blocks, pool has {self.allocator.n_free} free"
+                )
+            return bool(admitted)
+        for lane in sorted(
+            (l for l, r in enumerate(self.lanes) if r is not None),
+            key=lambda l: self.lanes[l].admit_seq,
+        ):
+            if self.lanes[lane] is not None:
+                self._grow(lane)
+        if not np.any(self.active):  # everyone preempted
+            return True
+        self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
+        nxt, self.pools = self._step(
+            self.params,
+            jnp.asarray(self.last_tok[:, None]),
+            self.pools,
+            jnp.asarray(self.tables),
+            jnp.asarray(self.pos),
+            jnp.asarray(self.active),
+        )
+        nxt = np.asarray(nxt)
+        self.decode_steps += 1
+        for lane, req in enumerate(self.lanes):
+            if req is None or not self.active[lane]:
+                continue
+            self.pos[lane] += 1
+            req.emitted.append(int(nxt[lane]))
+            self.last_tok[lane] = nxt[lane]
+            if req.remaining <= 0:
+                self._retire(lane)
+        return True
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the queue and all lanes; → {rid: generated tokens}."""
+        while self.queue or any(r is not None for r in self.lanes):
+            self.step()
+        return dict(self.done)
+
+    def generate(self, prompts, max_new_tokens: Optional[int] = None) -> list:
+        """Convenience: submit each prompt, drain, return in submit order."""
+        rids = [self.submit(p, max_new_tokens) for p in prompts]
+        out = self.run()
+        return [out[r] for r in rids]
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        nb = self.allocator.num_blocks
+        return {
+            "num_blocks": nb,
+            "block_size": self.pcfg.block_size,
+            "blocks_in_use": self.allocator.n_used,
+            "cache_bytes_allocated": nb * self.block_bytes,
+            "cache_bytes_live": self.allocator.n_used * self.block_bytes,
+            "peak_blocks_live": self.peak_blocks_live,
+            "peak_cache_bytes_live": self.peak_blocks_live * self.block_bytes,
+            "decode_steps": self.decode_steps,
+            "preemptions": self.preemptions,
+            "decode_traces": self.decode_traces,
+            "prefill_traces": self.prefill_traces,
+        }
+
+    def contiguous_cache_bytes(self, n_requests: int) -> int:
+        """What the contiguous engine would allocate for the same load."""
+        shapes = jax.eval_shape(
+            lambda: zoo.cache_init(self.cfg)(self.cfg, n_requests, self.cap)
+        )
+        return sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(shapes)
+        )

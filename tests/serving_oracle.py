@@ -1,0 +1,55 @@
+"""Sequential-oracle harness for paged / continuous-batching serving.
+
+The oracle runs each request ALONE through the contiguous-cache
+``serve.engine.Engine`` (batch 1, greedy) — the path already validated
+token-exact against pure stepwise decode in ``test_substrates`` — and
+asserts the system under test emitted token-identical output.
+
+Exactness contract: the paged decode gathers each lane's KV through its
+own block table in contiguous slot order, masks never-written slots to
+an exact-zero softmax contribution, and the scheduler's per-request
+prefill uses the same prompt-bucketing scheme as the engine, so paged
+continuous batching is bitwise-reproducible against this oracle — any
+drift is a real indexing/masking bug, not fp noise. Keep
+``prefill_chunk`` identical between oracle and subject.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.engine import Engine, ServeConfig
+
+
+def oracle_generate(cfg, params, prompts, max_new_tokens, ctx_len,
+                    prefill_chunk: int = 8, adapters=None):
+    """Run each prompt alone through the sequential engine.
+
+    prompts: list of 1-D int arrays (ragged lengths allowed).
+    max_new_tokens: int, or per-request list.
+    → list of 1-D int32 arrays of generated tokens.
+    """
+    if isinstance(max_new_tokens, int):
+        max_new_tokens = [max_new_tokens] * len(prompts)
+    out = []
+    for p, n in zip(prompts, max_new_tokens):
+        eng = Engine(
+            cfg, params,
+            ServeConfig(max_new_tokens=n, ctx_len=ctx_len,
+                        prefill_chunk=prefill_chunk),
+            adapters=adapters,
+        )
+        out.append(eng.generate(np.asarray(p, np.int32)[None])[0])
+    return out
+
+
+def assert_matches_oracle(cfg, params, prompts, got, max_new_tokens, ctx_len,
+                          prefill_chunk: int = 8, adapters=None):
+    """Token-exact comparison of ``got`` against the sequential oracle."""
+    want = oracle_generate(cfg, params, prompts, max_new_tokens, ctx_len,
+                           prefill_chunk=prefill_chunk, adapters=adapters)
+    assert len(got) == len(want), (len(got), len(want))
+    for i, (w, g) in enumerate(zip(want, got)):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w),
+            err_msg=f"request {i} diverged from the sequential oracle",
+        )
