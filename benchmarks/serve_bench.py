@@ -7,12 +7,16 @@ Measures, per weight format, on the smoke reference model:
 - decode tokens/s (steady-state generation loop),
 - measured weight bytes (QTensor storage, not a model);
 
-and for the paged continuous-batching engine on a mixed-length request
-set:
+for the paged continuous-batching engine on a mixed-length request set:
 - end-to-end generated tokens/s,
 - ``cache_bytes_live`` — peak bytes of KV blocks actually in use —
   against ``cache_bytes_contiguous``, what the per-request ctx_len
-  caches of the contiguous engine would allocate for the same load.
+  caches of the contiguous engine would allocate for the same load;
+
+and for per-request stochastic decode (``serve.sampling``): end-to-end
+generated tokens/s greedy vs sampled (temperature + top-k + top-p +
+penalties) through the same compiled step — the delta is the in-step
+sampling math (penalty scatter, sort-based truncations, Gumbel draw).
 
 Emits ``BENCH_serve.json`` so future PRs have a perf trajectory
 (``scripts/check_bench.py`` diffs it in CI; the committed baseline is
@@ -39,6 +43,8 @@ import numpy as np
 from repro.core.qpruner import QPrunerConfig, quantize_blocks
 from repro.core.quantization import measured_weight_bytes
 from repro.models import model_zoo as zoo
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import PagedEngine, PagedServeConfig
 
 
@@ -108,6 +114,32 @@ def _bench_paged(cfg, params, *, lengths, new_tokens, ctx_len, block_size,
     }
 
 
+def _bench_sampled(cfg, params, *, batch, prompt_len, new_tokens, reps):
+    """Greedy vs sampled end-to-end generation through the Engine loop.
+
+    Both run the SAME compiled decode step (the sampler is always in the
+    graph; greedy lanes take the argmax branch), so the ratio isolates
+    nothing but the extra sampling math."""
+    ctx = prompt_len + new_tokens
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+    specs = {
+        "greedy": SamplingParams(),
+        "sampled": SamplingParams(temperature=0.8, top_k=32, top_p=0.95,
+                                  repetition_penalty=1.1,
+                                  frequency_penalty=0.1, seed=7),
+    }
+    eng = Engine(cfg, params,
+                 ServeConfig(max_new_tokens=new_tokens, ctx_len=ctx))
+    out = {}
+    for mode, sp in specs.items():
+        eng.generate(prompts, sampling=sp)  # compile
+        dt = min(_timed(lambda: eng.generate(prompts, sampling=sp))
+                 for _ in range(reps))
+        out[f"{mode}_tok_per_s"] = batch * new_tokens / dt
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -164,6 +196,17 @@ def main():
         f"KV live {r['cache_bytes_live']/1e6:6.2f} MB "
         f"(contiguous would hold {r['cache_bytes_contiguous']/1e6:6.2f} MB — "
         f"{r['cache_bytes_contiguous']/max(r['cache_bytes_live'],1):.2f}x)"
+    )
+
+    results["sampling"] = r = _bench_sampled(
+        cfg, params, batch=batch, prompt_len=prompt_len,
+        new_tokens=new_tokens, reps=reps,
+    )
+    print(
+        f"{'sampling':12s} greedy  {r['greedy_tok_per_s']:9.1f} tok/s  "
+        f"sampled {r['sampled_tok_per_s']:9.1f} tok/s "
+        f"({r['greedy_tok_per_s']/max(r['sampled_tok_per_s'],1e-9):.2f}x "
+        f"sampling overhead)"
     )
 
     payload = {

@@ -57,8 +57,32 @@ Tokens are bit-identical to running each request alone through the
 sequential engine — ``tests/serving_oracle.py`` is the differential
 harness, ``benchmarks/serve_bench.py`` tracks the live-vs-contiguous
 cache bytes, and ``python -m repro.launch.serve --paged`` is the CLI
-entry. Greedy-only; if the pool runs dry the youngest request is
-preempted by recompute and still completes exactly.
+entry. If the pool runs dry the youngest request is preempted by
+recompute and still completes exactly.
+
+Sampled decode (per-request stochastic generation)
+--------------------------------------------------
+Both engines take per-request :class:`repro.serve.sampling.SamplingParams`
+— temperature, top-k, top-p, repetition/frequency penalties, seed, and
+lifecycle bounds (max_tokens / stop_tokens):
+
+  from repro.serve.sampling import SamplingParams
+  sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=7)
+  eng.generate(prompts, sampling=sp)                 # contiguous Engine
+  peng.submit(prompt, 24, sampling=sp)               # paged scheduler
+
+Every draw is keyed by ``fold_in(fold_in(PRNGKey(seed), rid), position)``
+— no global PRNG threads the batch — so a request's sampled stream under
+a fixed ``(seed, rid)`` is bit-identical whether it decodes alone,
+padded into any batch shape, in any continuous-batching lane mix, or
+after preemption-by-recompute. The sampler runs INSIDE the one compiled
+decode step (no retrace as specs churn), greedy lanes (``temperature=0``)
+mix freely with stochastic ones, and a lane hitting its stop token
+retires immediately, releasing its KV blocks to the allocator. CLI:
+``python -m repro.launch.serve --temperature 0.8 --top-k 40 --top-p 0.95
+--sampling-seed 7 [--paged]``. The demo below reproduces one request's
+sampled stream from a mixed paged run with a solo run of the same
+``(seed, rid)``.
 """
 import sys
 import time
@@ -142,6 +166,28 @@ def main():
         f"  KV peak live {st['peak_cache_bytes_live']/1e3:.1f} kB vs "
         f"{peng.contiguous_cache_bytes(len(reqs))/1e3:.1f} kB contiguous"
     )
+
+    # sampled decode: per-request streams that survive batching. The
+    # same (seed, rid) run alone reproduces its mixed-batch tokens
+    # bit-exactly (counter-based keys — see module docstring).
+    from repro.serve.sampling import SamplingParams
+
+    sp = SamplingParams(temperature=0.8, top_k=16, seed=7)
+    mixed = PagedEngine(
+        pcfg, qpk, PagedServeConfig(ctx_len=32, block_size=4, max_batch=2)
+    )
+    mixed.submit(reqs[0], 8, sampling=SamplingParams(temperature=1.2, seed=1),
+                 rid=1)
+    mixed.submit(reqs[1], 8, sampling=sp, rid=7)
+    got = mixed.run()[7]
+    solo = PagedEngine(
+        pcfg, qpk, PagedServeConfig(ctx_len=32, block_size=4, max_batch=1)
+    )
+    solo.submit(reqs[1], 8, sampling=sp, rid=7)
+    alone = solo.run()[7]
+    assert np.array_equal(got, alone)
+    print(f"sampled decode (T=0.8, top-k 16, seed 7): {got.tolist()}")
+    print("  mixed-batch stream == solo stream (admission-order invariant)")
 
     # single-matmul check: packed kernel == simulated quantization
     w = jax.tree.leaves(pruned)[3].astype(jnp.float32)

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the verify command from ROADMAP.md, verbatim, then the
-# serving perf/footprint trend check (warn-only; fails only on a >2x
-# regression vs the committed BENCH_serve.json — see check_bench.py).
+# Tier-1 CI: the verify command from ROADMAP.md, verbatim — the full
+# pytest pass, which includes the per-request sampling suite
+# (tests/test_sampling.py: counter-based RNG units, sampled-decode
+# oracle parity, admission-order invariance) — then the serving
+# perf/footprint trend check (warn-only; fails only on a >2x regression
+# vs the committed BENCH_serve.json — see check_bench.py; the bench now
+# also records greedy-vs-sampled decode throughput).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

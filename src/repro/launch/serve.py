@@ -22,6 +22,20 @@ staggered lengths share ``--max-batch`` decode lanes, KV lives in
 reports live-vs-contiguous cache bytes. ``--num-blocks`` bounds the pool
 (0 = enough for every lane at full context; smaller values exercise
 preemption-by-recompute).
+
+Sampling knobs (``serve.sampling``) apply to BOTH engines:
+
+- ``--temperature T``   — 0 (default) decodes greedily; T > 0 samples.
+- ``--top-k K``         — keep only each step's K most likely tokens
+  (0 = disabled).
+- ``--top-p P``         — nucleus truncation to probability mass P
+  (1.0 = disabled).
+- ``--sampling-seed S`` — the per-request RNG identity. Draws use
+  counter-based keys ``fold_in(fold_in(PRNGKey(seed), rid), position)``,
+  so re-running a request with the same ``(seed, rid)`` reproduces its
+  tokens bit-exactly regardless of batch composition or admission order
+  — including under ``--paged`` continuous batching, where requests
+  sharing the seed are decorrelated by their rid.
 """
 from __future__ import annotations
 
@@ -34,6 +48,7 @@ import numpy as np
 
 from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import PagedEngine, PagedServeConfig
 
 
@@ -55,7 +70,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples per-request streams")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampled decode (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) truncation (1.0 = off)")
+    ap.add_argument("--sampling-seed", type=int, default=0,
+                    help="per-request RNG seed; draws are keyed on "
+                         "(seed, rid, position) so streams are "
+                         "batch-shape and admission-order invariant")
     ap.add_argument("--quantize", type=int, default=0, choices=(0, 4, 8),
                     help="uniform bit width (0 = dense)")
     ap.add_argument("--bits-artifact", type=str, default="",
@@ -116,9 +140,9 @@ def main():
                   f"MemoryModel says {modeled/1e6:.2f} MB)")
 
     ctx = args.prompt_len + args.new_tokens
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.sampling_seed)
     if args.paged:
-        if args.temperature > 0:
-            raise SystemExit("--paged is greedy-only (see serve.scheduler)")
         eng = PagedEngine(
             cfg, params,
             PagedServeConfig(ctx_len=ctx, block_size=args.block_size,
@@ -133,10 +157,13 @@ def main():
         prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
                    for n in lengths]
         t0 = time.time()
-        out = eng.generate(prompts)
+        out = eng.generate(prompts, sampling=sp)
         dt = time.time() - t0
         st = eng.stats()
-        print(f"generated {len(out)} requests (lengths {lengths}) in {dt:.2f}s "
+        mode = "greedy" if args.temperature <= 0 else (
+            f"sampled T={args.temperature} seed={args.sampling_seed}")
+        print(f"generated {len(out)} requests ({mode}, lengths {lengths}) "
+              f"in {dt:.2f}s "
               f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile; "
               f"{st['decode_steps']} decode steps, "
               f"{st['preemptions']} preemptions, "
@@ -148,7 +175,9 @@ def main():
         print("sample:", out[0][:16].tolist())
         return
     eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
-                                          temperature=args.temperature, ctx_len=ctx))
+                                          temperature=args.temperature,
+                                          top_k=args.top_k, top_p=args.top_p,
+                                          seed=args.sampling_seed, ctx_len=ctx))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()

@@ -7,6 +7,8 @@ surface:
 - ``init_fn / axes_fn`` — parameters and their logical sharding axes
 - ``train_loss_fn``   — scalar loss for ``train_step``
 - ``serve_step_fn``   — one-token decode for ``serve_step``
+- ``sampler_fn``      — vectorized per-request token sampler (logits →
+  tokens) shared by both serving engines and the sequential oracle
 - ``cache_init / cache_axes`` — decode caches
 - ``input_specs(cfg, shape)`` — ShapeDtypeStruct stand-ins for the
   dry-run (no allocation)
@@ -40,6 +42,7 @@ __all__ = [
     "axes_fn",
     "train_loss_fn",
     "serve_step_fn",
+    "sampler_fn",
     "prefill_fn",
     "prefill_with_caches_fn",
     "supports_batched_prefill",
@@ -131,6 +134,20 @@ def serve_step_fn(cfg: ArchConfig):
     return lambda params, tokens, caches, pos, adapters=None: _tf.decode_step(
         cfg, params, tokens, caches, pos, adapters=adapters
     )
+
+
+def sampler_fn(cfg: ArchConfig):
+    """(logits [B, V], samp, pos [B]) → tokens [B] int32.
+
+    The per-request batch sampler (``serve.sampling.sample``) — one hook
+    so every family and both serving engines draw through the identical
+    function (the sequential oracle's bit-exactness depends on it).
+    ``samp`` is a ``stack_lanes`` dict plus per-lane ``counts``.
+    """
+    del cfg  # family-uniform today; the hook point is the contract
+    from repro.serve.sampling import sample
+
+    return sample
 
 
 def prefill_fn(cfg: ArchConfig):

@@ -3,8 +3,8 @@
 Production shape: requests are batched, the prompt is processed as ONE
 chunked batched forward that fills the KV caches (attention-family
 stacks; recurrent/SSM models fall back to scanning decode steps), then
-the decode loop emits one token per step with greedy or temperature
-sampling.
+the decode loop emits one token per step with per-request greedy or
+stochastic sampling (``serve.sampling``).
 
 Compiled-shape discipline: ``generate()`` buckets its inputs so varying
 ``np.ndarray`` prompt shapes hit a BOUNDED set of compiled programs
@@ -19,10 +19,11 @@ instead of retracing per (batch, seq):
   in ``[k*chunk, (k+1)*chunk)`` shares one compiled program.
 
 ``Engine.n_traces`` counts ``_generate`` retraces (one per shape bucket;
-regression-tested). Exact for greedy decoding; with ``temperature > 0``
-the sampled draws depend on the padded batch shape (the categorical
-noise tensor is shaped [B_pad, V]), which is still deterministic per
-bucket.
+regression-tested). Exact for greedy decoding AND batch-shape-invariant
+for sampled decoding: each lane draws under its own counter-based key
+(``fold_in(fold_in(PRNGKey(seed), rid), position)``), so a request's
+sampled tokens are bit-identical whether it runs alone, padded, or in
+any batch mix (``tests/test_packed_serving.py`` asserts this).
 
 Params may be dense, simulated-quantized (dense storage), or *packed*
 mixed precision — PackedStack/QTensor leaves from
@@ -36,13 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model_zoo as zoo
+from repro.serve.sampling import SamplingParams, observe, stack_lanes
 
 __all__ = ["ServeConfig", "Engine"]
 
@@ -51,11 +53,23 @@ __all__ = ["ServeConfig", "Engine"]
 class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 → greedy
+    top_k: int = 0  # 0 → disabled
+    top_p: float = 1.0  # 1 → disabled
+    repetition_penalty: float = 1.0  # 1 → disabled
+    frequency_penalty: float = 0.0  # 0 → disabled
     ctx_len: int = 512
     seed: int = 0
     # prompt-length bucketing granularity: prompts sharing
     # floor(S / prefill_chunk) hit the same compiled program
     prefill_chunk: int = 8
+
+    def default_sampling(self) -> SamplingParams:
+        """Per-request spec applied when ``generate`` gets no explicit one."""
+        return SamplingParams(
+            temperature=self.temperature, top_k=self.top_k, top_p=self.top_p,
+            repetition_penalty=self.repetition_penalty,
+            frequency_penalty=self.frequency_penalty, seed=self.seed,
+        )
 
 
 class Engine:
@@ -65,6 +79,7 @@ class Engine:
         self.adapters = adapters
         self.scfg = serve_cfg
         self._step = jax.jit(zoo.serve_step_fn(cfg))
+        self._sample = zoo.sampler_fn(cfg)
         self.n_traces = 0  # _generate compilations (one per shape bucket)
 
     def _prefill(self, tokens: jnp.ndarray, caches):
@@ -94,7 +109,7 @@ class Engine:
         return caches, pos, logits
 
     @functools.partial(jax.jit, static_argnums=0)
-    def _generate(self, tokens_main, tokens_rest, rest_len):
+    def _generate(self, tokens_main, tokens_rest, rest_len, samp):
         self.n_traces += 1  # python body runs once per compiled shape
         B = tokens_rest.shape[0]
         caches = zoo.cache_init(self.cfg)(self.cfg, B, self.scfg.ctx_len)
@@ -125,36 +140,70 @@ class Engine:
                 (tokens_rest.T, jnp.arange(tokens_rest.shape[1])),
             )
 
-        key = jax.random.PRNGKey(self.scfg.seed)
+        # penalty histograms over the prompt (prompt + generated tokens
+        # both count — the convention that keeps preemption-by-recompute
+        # in the paged engine bit-exact against this oracle path)
+        rows = jnp.arange(B)[:, None]
+        counts = jnp.zeros((B, self.cfg.vocab_size), jnp.int32)
+        if tokens_main.shape[1] > 0:
+            counts = counts.at[rows, tokens_main].add(1)
+        if tokens_rest.shape[1] > 0:
+            valid = jnp.arange(tokens_rest.shape[1])[None, :] < rest_len
+            counts = counts.at[rows, tokens_rest].add(valid.astype(jnp.int32))
 
         def body(carry, i):
-            caches, pos, logits, key = carry
-            if self.scfg.temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, logits.astype(jnp.float32) / self.scfg.temperature, axis=-1
-                )
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt = nxt.astype(jnp.int32)
+            caches, pos, logits, counts = carry
+            # ``pos`` is the absolute sequence position the drawn token
+            # will occupy — the RNG counter for this draw.
+            nxt = self._sample(
+                logits, dict(samp, counts=counts), jnp.broadcast_to(pos, (B,))
+            )
+            counts = observe(counts, nxt)
             new_logits, caches = step(self.params, nxt[:, None], caches, pos,
                                       adapters=self.adapters)
-            return (caches, pos + 1, new_logits[:, 0], key), nxt
+            return (caches, pos + 1, new_logits[:, 0], counts), nxt
 
         (_, _, _, _), toks = jax.lax.scan(
-            body, (caches, pos, logits, key), jnp.arange(self.scfg.max_new_tokens)
+            body, (caches, pos, logits, counts),
+            jnp.arange(self.scfg.max_new_tokens),
         )
         return toks.T  # [B, new_tokens]
 
-    def generate(self, prompts: np.ndarray) -> np.ndarray:
-        """prompts: [B, S] int32 → [B, max_new_tokens] int32."""
+    def generate(
+        self,
+        prompts: np.ndarray,
+        sampling: Union[SamplingParams, Sequence[SamplingParams], None] = None,
+        rids=None,
+    ) -> np.ndarray:
+        """prompts: [B, S] int32 → [B, max_new_tokens] int32.
+
+        ``sampling`` — one :class:`SamplingParams` for the whole batch or
+        a per-request sequence (None → the ``ServeConfig`` knobs).
+        ``rids`` ([B] ints, default ``arange(B)``) name each request's
+        RNG lane: a request re-run with the same ``(seed, rid)`` draws
+        the same tokens regardless of batch composition. The lockstep
+        engine always decodes the full budget; per-request
+        ``max_tokens`` / ``stop_tokens`` only truncate downstream
+        (``sampling.truncate_at_stop``).
+        """
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
+        if sampling is None:
+            sampling = self.scfg.default_sampling()
+        if isinstance(sampling, SamplingParams):
+            sampling = [sampling] * B
+        if len(sampling) != B:
+            raise ValueError(f"need {B} sampling specs, got {len(sampling)}")
+        if rids is None:
+            rids = np.arange(B, dtype=np.int32)
+        lanes = stack_lanes(sampling, rids)
         Bb = 1 << max(B - 1, 0).bit_length()  # next power of two ≥ B
         if Bb > B:
             prompts = np.concatenate(
                 [prompts, np.repeat(prompts[:1], Bb - B, axis=0)], axis=0
             )
+            lanes = {k: np.concatenate([v, np.repeat(v[:1], Bb - B, axis=0)])
+                     for k, v in lanes.items()}
         chunk = max(1, self.scfg.prefill_chunk)
         s_main = (S // chunk) * chunk
         rest_len = S - s_main
@@ -165,5 +214,6 @@ class Engine:
             jnp.asarray(prompts[:, :s_main]),
             jnp.asarray(rest),
             jnp.asarray(rest_len, jnp.int32),
+            {k: jnp.asarray(v) for k, v in lanes.items()},
         )
         return np.asarray(out)[:B]

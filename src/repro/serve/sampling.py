@@ -1,0 +1,251 @@
+"""Per-request stochastic decode: admission-order-invariant sampling.
+
+The serving engines used to thread ONE global PRNG through the whole
+batch, so a request's sampled tokens depended on the padded batch shape
+and on what else happened to be decoding. This module replaces that with
+a per-request sampling subsystem:
+
+- :class:`SamplingParams` — a per-request pytree of knobs (temperature,
+  top-k, top-p, repetition/frequency penalty, seed, max-tokens, stop
+  tokens) carried from ``submit()`` to the compiled decode step.
+- **Counter-based RNG** — every draw uses a key derived as
+  ``fold_in(fold_in(PRNGKey(seed), rid), position)``. No key is ever
+  split-and-carried, so the stream for request ``(seed, rid)`` at
+  sequence position ``p`` is a pure function of those three integers: a
+  request's tokens are bit-identical whether it decodes alone, in any
+  continuous-batching lane mix, or after preemption-by-recompute (the
+  re-prefilled request resumes at the same absolute positions).
+- :func:`sample` — the fully vectorized batch sampler that runs INSIDE
+  the single compiled decode step: per-lane penalties → temperature →
+  top-k → top-p → Gumbel-argmax draw, with greedy lanes
+  (``temperature <= 0``) taking a bit-exact ``argmax`` path. Every op is
+  row-wise, so a lane's draw never depends on the other lanes.
+
+Penalty convention: repetition (HF/CTRL style: divide positive /
+multiply negative seen logits) and frequency (OpenAI style: subtract
+``penalty * count``) both count ALL previous tokens — prompt and
+generated. Counting the prompt is what makes preemption-by-recompute
+exact: the requeued ``prompt + emitted`` regenerates the same counts the
+uninterrupted run had. ``counts`` is a ``[B, vocab]`` int32 array
+carried through the compiled step (:func:`observe`); engines seed it
+from the prompt (:func:`prompt_counts` host-side, or in-graph
+scatter-adds).
+
+``max_tokens`` / ``stop_tokens`` are lifecycle knobs: the continuous
+batching scheduler retires a lane the moment either fires (freeing its
+KV blocks immediately); the lockstep contiguous engine decodes its full
+budget and callers cut with :func:`truncate_at_stop` — the emitted
+stream is invariant either way, stopping only truncates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SamplingParams",
+    "GREEDY",
+    "SAMP_FIELDS",
+    "stack_lanes",
+    "prompt_counts",
+    "request_keys",
+    "apply_penalties",
+    "top_k_mask",
+    "top_p_mask",
+    "sample",
+    "observe",
+    "truncate_at_stop",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling spec (a pytree: numeric knobs are leaves).
+
+    ``temperature <= 0`` selects greedy argmax for the lane; ``top_k <= 0``
+    and ``top_p >= 1`` disable their truncations; ``repetition_penalty=1``
+    / ``frequency_penalty=0`` disable the penalties. ``seed`` is the
+    request's RNG identity (combined with the engine-assigned ``rid``).
+    ``max_tokens`` (None → engine default) and ``stop_tokens`` only bound
+    the request's lifetime — they never change which tokens are drawn.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    repetition_penalty: float = 1.0
+    frequency_penalty: float = 0.0
+    seed: int = 0
+    max_tokens: Optional[int] = None
+    stop_tokens: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if not (0.0 <= self.top_p <= 1.0):
+            raise ValueError(f"top_p must be in [0, 1], got {self.top_p}")
+        if self.repetition_penalty <= 0:
+            raise ValueError(
+                f"repetition_penalty must be > 0, got {self.repetition_penalty}"
+            )
+        if not (0 <= self.seed < 2**32):  # stored as uint32 lanes
+            raise ValueError(f"seed must be in [0, 2**32), got {self.seed}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        object.__setattr__(self, "stop_tokens", tuple(self.stop_tokens))
+
+
+jax.tree_util.register_dataclass(
+    SamplingParams,
+    data_fields=["temperature", "top_k", "top_p", "repetition_penalty",
+                 "frequency_penalty", "seed"],
+    meta_fields=["max_tokens", "stop_tokens"],
+)
+
+GREEDY = SamplingParams()
+
+# device-array fields of a batched lane spec, in stacking order
+SAMP_FIELDS = ("temperature", "top_k", "top_p", "repetition_penalty",
+               "frequency_penalty", "seed", "rid")
+
+_DTYPES = {
+    "temperature": np.float32,
+    "top_k": np.int32,
+    "top_p": np.float32,
+    "repetition_penalty": np.float32,
+    "frequency_penalty": np.float32,
+    "seed": np.uint32,
+    "rid": np.int32,
+}
+
+
+def stack_lanes(params: Sequence[SamplingParams], rids) -> dict:
+    """Stack per-request specs into host ``{field: [B] array}`` lanes.
+
+    Engines scatter/gather these rows on admit/retire; ``rid`` is the
+    engine-assigned request id that decorrelates requests sharing a seed.
+    """
+    rids = np.asarray(rids, np.int32)
+    if rids.shape != (len(params),):
+        raise ValueError(f"need one rid per request, got {rids.shape}")
+    out = {
+        f: np.asarray([getattr(p, f) for p in params], _DTYPES[f])
+        for f in SAMP_FIELDS if f != "rid"
+    }
+    out["rid"] = rids
+    return out
+
+
+def prompt_counts(vocab_size: int, prompt) -> np.ndarray:
+    """Host-side token histogram of a prompt → [vocab] int32."""
+    return np.bincount(
+        np.asarray(prompt, np.int64).reshape(-1), minlength=vocab_size
+    ).astype(np.int32)
+
+
+def request_keys(seed, rid, pos):
+    """Counter-based per-request keys: [B] seeds/rids/positions → [B] keys.
+
+    ``fold_in(fold_in(PRNGKey(seed), rid), pos)`` — a pure function of
+    the triple, so the draw at sequence position ``pos`` is independent
+    of batch composition, admission order, and preemption history.
+    """
+
+    def one(s, r, p):
+        k = jax.random.PRNGKey(s)
+        k = jax.random.fold_in(k, r)
+        return jax.random.fold_in(k, p)
+
+    return jax.vmap(one)(seed, jnp.asarray(rid, jnp.int32),
+                         jnp.asarray(pos, jnp.int32))
+
+
+def apply_penalties(logits, counts, repetition, frequency):
+    """Repetition (HF-style) + frequency (count-proportional) penalties.
+
+    At the defaults (1.0 / 0.0) every lane's row is bit-identical to the
+    input, so greedy decoding stays exact. ``counts`` covers prompt AND
+    generated tokens (see module docstring).
+    """
+    seen = counts > 0
+    rep = repetition[:, None]
+    logits = jnp.where(
+        seen & (logits > 0), logits / rep, jnp.where(seen, logits * rep, logits)
+    )
+    return logits - frequency[:, None] * counts.astype(logits.dtype)
+
+
+def top_k_mask(logits, k):
+    """Mask all but each lane's top-k logits to -inf (k<=0 → disabled)."""
+    V = logits.shape[-1]
+    kk = jnp.where(k <= 0, V, jnp.clip(k, 1, V)).astype(jnp.int32)
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    thr = jnp.take_along_axis(srt, kk[:, None] - 1, axis=-1)
+    return jnp.where(logits < thr, -jnp.inf, logits)
+
+
+def top_p_mask(logits, p):
+    """Nucleus mask: keep each lane's smallest prefix of probability mass
+    >= p (p>=1 → disabled; the top-1 token is always kept)."""
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # token kept iff the mass BEFORE it is < p (include the crossing
+    # token); p >= 1 keeps everything even when cumsum saturates early
+    keep = ((cum - probs) < p[:, None]) | (p[:, None] >= 1.0)
+    keep = keep.at[:, 0].set(True)
+    thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1)
+    return jnp.where(logits < thr[:, None], -jnp.inf, logits)
+
+
+def sample(logits, samp: dict, pos):
+    """Vectorized per-request draw — runs inside the compiled decode step.
+
+    logits: [B, V] (any float dtype); pos: [B] absolute sequence position
+    of the token being drawn; samp: ``stack_lanes`` fields plus
+    ``counts`` [B, V] int32. → tokens [B] int32.
+
+    Greedy lanes (temperature <= 0) take the exact argmax of the
+    penalized logits (bit-identical to plain argmax at default
+    penalties); sampled lanes draw via Gumbel-argmax under the lane's
+    counter-based key, so each row is a pure function of
+    (its logits row, its params, seed, rid, pos).
+    """
+    l = logits.astype(jnp.float32)
+    l = apply_penalties(l, samp["counts"], samp["repetition_penalty"],
+                        samp["frequency_penalty"])
+    greedy = jnp.argmax(l, axis=-1).astype(jnp.int32)
+    t = samp["temperature"].astype(jnp.float32)
+    ls = l / jnp.where(t > 0, t, 1.0)[:, None]
+    ls = top_k_mask(ls, samp["top_k"])
+    ls = top_p_mask(ls, samp["top_p"])
+    keys = request_keys(samp["seed"], samp["rid"], pos)
+    V = logits.shape[-1]
+    g = jax.vmap(lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)
+    drawn = jnp.argmax(ls + g, axis=-1).astype(jnp.int32)
+    return jnp.where(t > 0, drawn, greedy)
+
+
+def observe(counts, tokens, live=None):
+    """Record drawn tokens into the per-lane histograms.
+
+    ``live`` ([B] bool) masks lanes whose draw is discarded (inactive
+    continuous-batching lanes) so their rows stay untouched.
+    """
+    B = counts.shape[0]
+    inc = (jnp.ones((B,), counts.dtype) if live is None
+           else live.astype(counts.dtype))
+    return counts.at[jnp.arange(B), tokens].add(inc)
+
+
+def truncate_at_stop(tokens, stop_tokens) -> np.ndarray:
+    """Cut a generated stream after its first stop token (inclusive)."""
+    toks = np.asarray(tokens)
+    if not stop_tokens:
+        return toks
+    hits = np.nonzero(np.isin(toks, np.asarray(stop_tokens)))[0]
+    return toks[: hits[0] + 1] if hits.size else toks

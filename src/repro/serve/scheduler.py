@@ -9,7 +9,9 @@ replaces both halves:
   (``transformer.init_paged_caches``); a host-side :class:`BlockAllocator`
   hands blocks to requests on demand and a per-request block table maps
   logical slots to physical blocks. Allocation tracks live tokens, not
-  ``batch * ctx_len``.
+  ``batch * ctx_len``. The ``[max_batch, nmax]`` block-table array is
+  DEVICE-resident: admit/grow/retire patch it with ``.at[].set`` instead
+  of re-uploading a host table every decode step.
 - **Continuous batching** — :class:`PagedEngine` keeps ``max_batch``
   decode *lanes*. Between decode steps it admits queued requests into
   free lanes (per-request prefill → block-table insert) and retires
@@ -20,26 +22,36 @@ Exactness: lanes are independent — attention gathers through each lane's
 own table, inactive lanes read a zero-length context and write into the
 reserved trash block 0 — so each request's tokens are identical to
 running it alone through the sequential engine (``tests/serving_oracle``
-asserts token-exact agreement). Greedy decoding only: temperature
-sampling across a changing lane mix has no per-request-stable RNG
-semantics.
+asserts token-exact agreement). That now includes STOCHASTIC decode:
+every request carries its own :class:`~repro.serve.sampling.SamplingParams`,
+the compiled step draws each lane under a counter-based key
+``fold_in(fold_in(PRNGKey(seed), rid), position)``, and per-lane penalty
+histograms ride the step as device state — so sampled tokens are
+bit-identical across admission orders, lane mixes, and
+preemption-by-recompute (``tests/test_sampling`` is the property test).
+
+Requests retire the moment their per-request budget is spent OR a stop
+token fires — blocks are released immediately, not at the batch drain.
 
 If the pool runs dry while a request grows, the youngest active request
 is preempted by *recompute* (vLLM-style): its blocks are freed and it is
 requeued with ``prompt + emitted`` as the new prompt, which re-prefills
-to the exact same continuation.
+to the exact same continuation (positions AND penalty counts resume at
+their pre-eviction values, so the RNG stream is unchanged).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model_zoo as zoo
+from repro.serve import sampling as smp
+from repro.serve.sampling import GREEDY, SamplingParams
 
 __all__ = ["PagedServeConfig", "BlockAllocator", "Request", "PagedEngine"]
 
@@ -61,6 +73,7 @@ class Request:
     rid: int
     prompt: np.ndarray  # current prompt; grows on preemption-recompute
     max_new: int
+    sampling: SamplingParams = GREEDY
     emitted: list = dataclasses.field(default_factory=list)
     lane: int = -1
     blocks: list = dataclasses.field(default_factory=list)
@@ -69,6 +82,15 @@ class Request:
     @property
     def remaining(self) -> int:
         return self.max_new - len(self.emitted)
+
+    @property
+    def stopped(self) -> bool:
+        """Finished early on a stop token (budget may remain)."""
+        return bool(
+            self.sampling.stop_tokens
+            and self.emitted
+            and self.emitted[-1] in self.sampling.stop_tokens
+        )
 
 
 class BlockAllocator:
@@ -126,17 +148,28 @@ class PagedEngine:
             leaf.nbytes // nb for leaf in jax.tree.leaves(self.pools)
         )
         M = pcfg.max_batch
-        self.tables = np.zeros((M, self.nmax), np.int32)
+        # block tables live on device; admit/grow/retire patch rows in
+        # place instead of shipping a host [M, nmax] array every step
+        self.tables = jnp.full((M, self.nmax), TRASH_BLOCK, jnp.int32)
         self.pos = np.zeros((M,), np.int32)
         self.active = np.zeros((M,), bool)
         self.last_tok = np.zeros((M,), np.int32)
+        # per-lane sampling state: host scalar rows scattered on admit
+        # (the device copy is cached — re-uploaded only after an admit
+        # changes a lane, not every decode step), plus the
+        # device-resident penalty histograms the step carries
+        self.samp = smp.stack_lanes([GREEDY] * M, np.arange(M))
+        self._samp_dev = None  # invalidated whenever self.samp mutates
+        self.counts = jnp.zeros((M, cfg.vocab_size), jnp.int32)
         self.lanes: list[Optional[Request]] = [None] * M
         self.queue: deque[Request] = deque()
         self.done: dict[int, np.ndarray] = {}
         self._next_rid = 0
+        self._used_rids: set[int] = set()
         self._admit_seq = 0
         self.decode_steps = 0
         self.preemptions = 0
+        self.early_stops = 0  # retirements on a stop token, budget unspent
         self.peak_blocks_live = 0
         # trace counters: the python body of a jitted fn runs once per
         # compiled shape, so these count compilations, not calls.
@@ -144,20 +177,26 @@ class PagedEngine:
         self.prefill_traces = 0
 
         pstep = zoo.paged_step_fn(cfg)
+        sample = zoo.sampler_fn(cfg)
         cap = self.cap
 
-        def _step(params, tokens, pools, tables, pos, active):
+        def _step(params, tokens, pools, tables, pos, active, samp, counts):
             self.decode_traces += 1
             pages = {"tables": tables, "active": active,
                      "cap": jnp.asarray(cap, jnp.int32)}
             logits, pools = pstep(params, tokens, pools, pos, pages,
                                   adapters=adapters)
-            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-            return nxt, pools
+            # the drawn token occupies absolute position pos+1; that is
+            # its RNG counter, so the draw is invariant to the lane mix
+            nxt = sample(logits[:, 0], dict(samp, counts=counts), pos + 1)
+            counts = smp.observe(counts, nxt, live=active)
+            return nxt, pools, counts
 
-        # donate the pools: decode must update the KV blocks in place, not
-        # copy the whole pool per token (no-op on backends w/o donation)
-        self._step = jax.jit(_step, donate_argnums=(2,))
+        # donate pools + counts: decode must update the KV blocks and the
+        # penalty histograms in place, not copy whole pools per token
+        # (no-op on backends w/o donation)
+        self._step = jax.jit(_step, donate_argnums=(2, 7))
+        self._sample1 = jax.jit(sample)  # admit-time first-token draw
 
         sstep = zoo.serve_step_fn(cfg)
         prefill = zoo.prefill_with_caches_fn(cfg)
@@ -198,10 +237,22 @@ class PagedEngine:
 
     # -- request lifecycle --------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               rid: Optional[int] = None) -> int:
+        """Queue a request → its rid (the request's RNG lane identity).
+
+        ``sampling.max_tokens`` overrides ``max_new_tokens`` /
+        the config default; an explicit ``rid`` pins the RNG lane (must
+        be unique per engine) so a run can be reproduced regardless of
+        what else is submitted around it.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        sampling = GREEDY if sampling is None else sampling
         max_new = (self.pcfg.max_new_tokens if max_new_tokens is None
                    else max_new_tokens)
+        if sampling.max_tokens is not None:
+            max_new = sampling.max_tokens
         if max_new < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new}")
         if prompt.size + max_new > self.cap:
@@ -209,10 +260,19 @@ class PagedEngine:
                 f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
                 f"ctx_len {self.cap}"
             )
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new))
+        if rid is None:
+            while self._next_rid in self._used_rids:
+                self._next_rid += 1
+            rid = self._next_rid
+            self._next_rid += 1
+        elif rid in self._used_rids:
+            raise ValueError(f"rid {rid} already used in this engine")
+        self._used_rids.add(rid)
+        self.queue.append(Request(rid, prompt, max_new, sampling))
         return rid
+
+    def _finished(self, req: Request) -> bool:
+        return req.remaining <= 0 or req.stopped
 
     def _admit(self) -> int:
         admitted = 0
@@ -243,30 +303,52 @@ class PagedEngine:
             self.pools = self._insert(
                 self.pools, caches, jnp.asarray(brow), jnp.asarray(S, jnp.int32)
             )
+            # per-lane sampling state: scatter the request's spec and its
+            # prompt histogram, then draw the first token at position S
+            # through the same sampler the compiled step uses
+            row = smp.stack_lanes([req.sampling], [req.rid])
+            cnts = smp.prompt_counts(self.cfg.vocab_size, req.prompt)
+            tok0 = int(np.asarray(self._sample1(
+                logits,
+                {**{k: jnp.asarray(v) for k, v in row.items()},
+                 "counts": jnp.asarray(cnts[None])},
+                jnp.asarray([S], jnp.int32),
+            ))[0])
+            cnts[tok0] += 1
             req.lane, req.blocks = lane, list(blocks)
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
-            req.emitted.append(int(np.argmax(np.asarray(logits[0]))))
+            req.emitted.append(tok0)
             self.lanes[lane] = req
-            self.tables[lane] = brow
+            self.tables = self.tables.at[lane].set(jnp.asarray(brow))
+            self.counts = self.counts.at[lane].set(jnp.asarray(cnts))
+            for k, v in row.items():
+                self.samp[k][lane] = v[0]
+            self._samp_dev = None
             self.pos[lane] = S
             self.active[lane] = True
-            self.last_tok[lane] = req.emitted[-1]
+            self.last_tok[lane] = tok0
             admitted += 1
-            if req.remaining <= 0:
+            if self._finished(req):
                 self._retire(lane)
         if admitted:
             self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
         return admitted
 
     def _retire(self, lane: int) -> None:
+        """Free the lane NOW — on budget exhaustion or a stop token —
+        so its blocks recycle while the rest of the batch keeps going."""
         req = self.lanes[lane]
+        if req.stopped and req.remaining > 0:
+            self.early_stops += 1
         self.allocator.release(req.blocks)
         req.blocks = []
         req.lane = -1
         self.lanes[lane] = None
         self.active[lane] = False
-        self.tables[lane] = TRASH_BLOCK
+        self.tables = self.tables.at[lane].set(TRASH_BLOCK)
+        # counts/samp rows are overwritten by the next admit; inactive
+        # lanes never update them (observe masks on ``active``)
         self.done[req.rid] = np.asarray(req.emitted, np.int32)
 
     def _preempt(self, lane: int) -> None:
@@ -280,7 +362,7 @@ class PagedEngine:
         )
         self.lanes[lane] = None
         self.active[lane] = False
-        self.tables[lane] = TRASH_BLOCK
+        self.tables = self.tables.at[lane].set(TRASH_BLOCK)
         self.queue.appendleft(req)
         self.preemptions += 1
 
@@ -307,7 +389,7 @@ class PagedEngine:
                     return False
                 continue
             req.blocks.extend(got)
-            self.tables[lane, len(req.blocks) - 1] = got[0]
+            self.tables = self.tables.at[lane, len(req.blocks) - 1].set(got[0])
         return True
 
     # -- scheduling loop ----------------------------------------------------
@@ -336,13 +418,17 @@ class PagedEngine:
         if not np.any(self.active):  # everyone preempted
             return True
         self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
-        nxt, self.pools = self._step(
+        if self._samp_dev is None:
+            self._samp_dev = {k: jnp.asarray(v) for k, v in self.samp.items()}
+        nxt, self.pools, self.counts = self._step(
             self.params,
             jnp.asarray(self.last_tok[:, None]),
             self.pools,
-            jnp.asarray(self.tables),
+            self.tables,
             jnp.asarray(self.pos),
             jnp.asarray(self.active),
+            self._samp_dev,
+            self.counts,
         )
         nxt = np.asarray(nxt)
         self.decode_steps += 1
@@ -352,7 +438,7 @@ class PagedEngine:
             self.pos[lane] += 1
             req.emitted.append(int(nxt[lane]))
             self.last_tok[lane] = nxt[lane]
-            if req.remaining <= 0:
+            if self._finished(req):
                 self._retire(lane)
         return True
 
@@ -362,9 +448,18 @@ class PagedEngine:
             self.step()
         return dict(self.done)
 
-    def generate(self, prompts, max_new_tokens: Optional[int] = None) -> list:
+    def generate(self, prompts, max_new_tokens: Optional[int] = None,
+                 sampling: Union[SamplingParams, Sequence[SamplingParams],
+                                 None] = None) -> list:
         """Convenience: submit each prompt, drain, return in submit order."""
-        rids = [self.submit(p, max_new_tokens) for p in prompts]
+        if sampling is None or isinstance(sampling, SamplingParams):
+            sampling = [sampling] * len(prompts)
+        if len(sampling) != len(prompts):
+            raise ValueError(
+                f"need {len(prompts)} sampling specs, got {len(sampling)}"
+            )
+        rids = [self.submit(p, max_new_tokens, sampling=sp)
+                for p, sp in zip(prompts, sampling)]
         out = self.run()
         return [out[r] for r in rids]
 
@@ -382,6 +477,7 @@ class PagedEngine:
             "peak_cache_bytes_live": self.peak_blocks_live * self.block_bytes,
             "decode_steps": self.decode_steps,
             "preemptions": self.preemptions,
+            "early_stops": self.early_stops,
             "decode_traces": self.decode_traces,
             "prefill_traces": self.prefill_traces,
         }

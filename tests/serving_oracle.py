@@ -1,7 +1,7 @@
 """Sequential-oracle harness for paged / continuous-batching serving.
 
 The oracle runs each request ALONE through the contiguous-cache
-``serve.engine.Engine`` (batch 1, greedy) — the path already validated
+``serve.engine.Engine`` (batch 1) — the path already validated
 token-exact against pure stepwise decode in ``test_substrates`` — and
 asserts the system under test emitted token-identical output.
 
@@ -12,41 +12,69 @@ prefill uses the same prompt-bucketing scheme as the engine, so paged
 continuous batching is bitwise-reproducible against this oracle — any
 drift is a real indexing/masking bug, not fp noise. Keep
 ``prefill_chunk`` identical between oracle and subject.
+
+Sampled decode is covered by the same contract: both engines draw
+through ``model_zoo.sampler_fn`` under counter-based per-request keys
+``(seed, rid, position)``, so passing each request's
+:class:`~repro.serve.sampling.SamplingParams` and its rid reproduces
+the exact stochastic stream the batched system emitted. Per-request
+``stop_tokens`` / ``max_tokens`` truncate the oracle stream the same
+way the scheduler's early retirement does.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.sampling import SamplingParams, truncate_at_stop
 
 
 def oracle_generate(cfg, params, prompts, max_new_tokens, ctx_len,
-                    prefill_chunk: int = 8, adapters=None):
+                    prefill_chunk: int = 8, adapters=None,
+                    sampling=None, rids=None):
     """Run each prompt alone through the sequential engine.
 
     prompts: list of 1-D int arrays (ragged lengths allowed).
     max_new_tokens: int, or per-request list.
+    sampling: per-request SamplingParams list (None → greedy); a spec's
+    ``max_tokens`` overrides the request's budget and its
+    ``stop_tokens`` truncate the stream (inclusive), mirroring the
+    paged scheduler's early retirement.
+    rids: per-request RNG lane ids — pass the ids the system under test
+    used so the counter-based draws line up (default: 0 for each,
+    matching ``Engine.generate``'s batch-1 default).
     → list of 1-D int32 arrays of generated tokens.
     """
     if isinstance(max_new_tokens, int):
         max_new_tokens = [max_new_tokens] * len(prompts)
+    if sampling is None:
+        sampling = [None] * len(prompts)
+    if rids is None:
+        rids = [0] * len(prompts)
     out = []
-    for p, n in zip(prompts, max_new_tokens):
+    for p, n, sp, rid in zip(prompts, max_new_tokens, sampling, rids):
+        sp = SamplingParams() if sp is None else sp
+        if sp.max_tokens is not None:
+            n = sp.max_tokens
         eng = Engine(
             cfg, params,
             ServeConfig(max_new_tokens=n, ctx_len=ctx_len,
                         prefill_chunk=prefill_chunk),
             adapters=adapters,
         )
-        out.append(eng.generate(np.asarray(p, np.int32)[None])[0])
+        toks = eng.generate(np.asarray(p, np.int32)[None],
+                            sampling=[sp], rids=[rid])[0]
+        out.append(truncate_at_stop(toks, sp.stop_tokens))
     return out
 
 
 def assert_matches_oracle(cfg, params, prompts, got, max_new_tokens, ctx_len,
-                          prefill_chunk: int = 8, adapters=None):
+                          prefill_chunk: int = 8, adapters=None,
+                          sampling=None, rids=None):
     """Token-exact comparison of ``got`` against the sequential oracle."""
     want = oracle_generate(cfg, params, prompts, max_new_tokens, ctx_len,
-                           prefill_chunk=prefill_chunk, adapters=adapters)
+                           prefill_chunk=prefill_chunk, adapters=adapters,
+                           sampling=sampling, rids=rids)
     assert len(got) == len(want), (len(got), len(want))
     for i, (w, g) in enumerate(zip(want, got)):
         np.testing.assert_array_equal(

@@ -13,6 +13,7 @@ import pytest
 from serving_oracle import assert_matches_oracle, oracle_generate
 from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.sampling import SamplingParams, truncate_at_stop
 from repro.serve.scheduler import BlockAllocator, PagedEngine, PagedServeConfig
 
 RNG = np.random.default_rng(1)
@@ -70,6 +71,60 @@ def test_retired_lane_blocks_are_recycled():
     assert st["blocks_in_use"] == 0  # everything released
     assert st["cache_bytes_live"] == 0
     assert st["peak_blocks_live"] <= eng.nmax  # one lane at a time
+    assert eng.decode_traces == 1
+
+
+def test_stop_token_retires_lane_and_frees_blocks_early():
+    """A lane hitting its per-request stop token retires IMMEDIATELY —
+    its blocks recycle while the other lane keeps decoding, instead of
+    riding along until the budget drains."""
+    cfg, params = _smoke()
+    pa, pb = _prompts([6, 7])
+    # B's greedy stream tells us a token it will emit; stop on the 3rd
+    ref = oracle_generate(cfg, params, [pb], 8, CAP, prefill_chunk=CHUNK)[0]
+    stop = int(ref[2])
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=2,
+                         prefill_chunk=CHUNK),
+    )
+    ra = eng.submit(pa, 12)
+    rb = eng.submit(pb, 8, sampling=SamplingParams(stop_tokens=(stop,)))
+    used_after_stop = None
+    while eng.queue or any(r is not None for r in eng.lanes):
+        eng.step()
+        if rb in eng.done and used_after_stop is None:
+            used_after_stop = eng.allocator.n_used
+            # A must still be mid-decode when B's blocks come back
+            assert any(r is not None for r in eng.lanes)
+    out = dict(eng.done)
+    # B stopped on (and including) the stop token, budget unspent
+    np.testing.assert_array_equal(out[rb], truncate_at_stop(ref, (stop,)))
+    assert out[rb][-1] == stop and eng.early_stops == 1
+    assert len(out[ra]) == 12  # A unaffected by B's early exit
+    # block-recycling: once B retired, only A's blocks were live —
+    # A needs at most ceil((|pa| + 12) / BS) blocks; both lanes live
+    # would hold at least 2 more
+    assert used_after_stop <= -(-(pa.size + 12) // BS)
+    assert eng.stats()["blocks_in_use"] == 0
+
+
+def test_block_tables_are_device_resident():
+    """The [max_batch, nmax] block-table array lives on device and is
+    patched with .at[].set on admit/grow/retire — never re-uploaded from
+    a host array each decode step."""
+    cfg, params = _smoke()
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=2,
+                         prefill_chunk=CHUNK),
+    )
+    assert isinstance(eng.tables, jax.Array)
+    prompts = _prompts([9, 5])
+    eng.generate(prompts, 6)
+    assert isinstance(eng.tables, jax.Array)
+    # all lanes retired: every table row points back at the trash block
+    np.testing.assert_array_equal(np.asarray(eng.tables), 0)
     assert eng.decode_traces == 1
 
 

@@ -1,0 +1,312 @@
+"""Per-request sampling: counter-based RNG, masks/penalties, invariance.
+
+The contract under test (``serve.sampling``): a request's stochastic
+token stream is a pure function of ``(seed, rid, position)`` plus its
+own logits — bit-identical whether the request decodes alone through the
+sequential engine, inside any continuous-batching lane mix, in any
+admission order, or across a preemption-by-recompute cycle. The
+sequential oracle (``serving_oracle``) is the ground truth, as it is for
+greedy decode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from serving_oracle import assert_matches_oracle, oracle_generate
+from repro.core.qpruner import QPrunerConfig, quantize_blocks
+from repro.models import model_zoo as zoo
+from repro.serve import sampling as smp
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import PagedEngine, PagedServeConfig
+
+RNG = np.random.default_rng(7)
+CAP, BS, CHUNK = 32, 4, 8
+V = 64  # unit-test vocab
+
+
+def _smoke(**kw):
+    cfg = zoo.get_smoke_config("llama7b_like").with_(**kw)
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(lengths):
+    return [RNG.integers(0, 512, (n,)).astype(np.int32) for n in lengths]
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("prefill_chunk", CHUNK)
+    return PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, **kw),
+    )
+
+
+def _samp(B, *, counts=None, **kw):
+    specs = [SamplingParams(**kw)] * B
+    s = {k: jnp.asarray(v) for k, v in smp.stack_lanes(specs, np.arange(B)).items()}
+    s["counts"] = (jnp.zeros((B, V), jnp.int32) if counts is None
+                   else jnp.asarray(counts))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Sampler primitives vs numpy references
+# ---------------------------------------------------------------------------
+
+
+def test_top_k_mask_matches_reference():
+    x = RNG.normal(size=(4, V)).astype(np.float32)
+    k = np.asarray([0, 1, 5, V + 9], np.int32)  # disabled / greedy-ish / mid / over
+    got = np.asarray(smp.top_k_mask(jnp.asarray(x), jnp.asarray(k)))
+    for i in range(4):
+        kk = V if k[i] <= 0 else min(int(k[i]), V)
+        thr = np.sort(x[i])[::-1][kk - 1]
+        want = np.where(x[i] < thr, -np.inf, x[i])
+        np.testing.assert_array_equal(got[i], want)
+    assert np.isfinite(got[2]).sum() == 5  # no ties in gaussian logits
+
+
+def test_top_p_mask_matches_reference():
+    x = RNG.normal(size=(4, V)).astype(np.float32) * 3
+    p = np.asarray([1.0, 0.5, 0.9, 0.0], np.float32)
+    got = np.asarray(smp.top_p_mask(jnp.asarray(x), jnp.asarray(p)))
+    for i in range(4):
+        srt = np.sort(x[i])[::-1]
+        probs = np.exp(srt - srt.max())
+        probs /= probs.sum()
+        keep = ((np.cumsum(probs) - probs) < p[i]) | (p[i] >= 1.0)
+        keep[0] = True  # top-1 always survives
+        thr = srt[keep].min()
+        want = np.where(x[i] < thr, -np.inf, x[i])
+        np.testing.assert_array_equal(got[i], want)
+    np.testing.assert_array_equal(got[0], x[0])  # p=1 is a strict no-op
+    assert np.isfinite(got[3]).sum() == 1  # p=0 degenerates to greedy
+
+
+def test_penalties_match_reference_and_default_to_noop():
+    x = RNG.normal(size=(3, V)).astype(np.float32)
+    counts = RNG.integers(0, 4, (3, V)).astype(np.int32)
+    rep = np.asarray([1.0, 1.8, 0.7], np.float32)
+    freq = np.asarray([0.0, 0.5, 0.0], np.float32)
+    got = np.asarray(smp.apply_penalties(
+        jnp.asarray(x), jnp.asarray(counts), jnp.asarray(rep), jnp.asarray(freq)
+    ))
+    for i in range(3):
+        want = x[i].copy()
+        seen = counts[i] > 0
+        pos = seen & (want > 0)
+        want[pos] = want[pos] / rep[i]
+        want[seen & ~pos] = want[seen & ~pos] * rep[i]
+        want = want - freq[i] * counts[i]
+        np.testing.assert_allclose(got[i], want, rtol=1e-6)
+    # lane 0 has both penalties disabled: bit-identical passthrough
+    np.testing.assert_array_equal(got[0], x[0])
+
+
+def test_greedy_lane_is_exact_argmax():
+    x = RNG.normal(size=(5, V)).astype(np.float32)
+    toks = smp.sample(jnp.asarray(x), _samp(5), jnp.zeros((5,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(toks), np.argmax(x, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Counter-based keys: draws are pure functions of (seed, rid, pos)
+# ---------------------------------------------------------------------------
+
+
+def test_request_keys_are_counter_based():
+    k0 = np.asarray(smp.request_keys(
+        jnp.asarray([3], jnp.uint32), jnp.asarray([5]), jnp.asarray([9])))
+    same = np.asarray(smp.request_keys(
+        jnp.asarray([3], jnp.uint32), jnp.asarray([5]), jnp.asarray([9])))
+    np.testing.assert_array_equal(k0, same)
+    for seed, rid, pos in [(4, 5, 9), (3, 6, 9), (3, 5, 10)]:
+        other = np.asarray(smp.request_keys(
+            jnp.asarray([seed], jnp.uint32), jnp.asarray([rid]),
+            jnp.asarray([pos])))
+        assert not np.array_equal(k0, other), (seed, rid, pos)
+
+
+def test_draws_are_batch_shape_independent():
+    """The same (logits row, seed, rid, pos) draws the same token at any
+    batch size / row placement — no global key threads the batch."""
+    x = RNG.normal(size=(5, V)).astype(np.float32)
+    samp5 = _samp(5, temperature=1.5, seed=11)
+    pos = jnp.arange(5, dtype=jnp.int32) + 3
+    toks5 = np.asarray(smp.sample(jnp.asarray(x), samp5, pos))
+    for i in range(5):
+        s1 = {k: v[i:i + 1] for k, v in samp5.items()}
+        s1["rid"] = jnp.asarray([i], jnp.int32)  # arange rid from _samp
+        t1 = np.asarray(smp.sample(jnp.asarray(x[i:i + 1]), s1, pos[i:i + 1]))
+        assert t1[0] == toks5[i]
+
+
+def test_draws_vary_with_position_and_seed():
+    x = np.zeros((1, V), np.float32)  # uniform logits: pure RNG
+    draws = [
+        int(np.asarray(smp.sample(
+            jnp.asarray(x), _samp(1, temperature=1.0, seed=s),
+            jnp.asarray([p], jnp.int32)))[0])
+        for s, p in [(0, 0), (0, 1), (0, 2), (1, 0), (2, 0)]
+    ]
+    assert len(set(draws)) > 1  # the stream moves with pos and seed
+
+
+# ---------------------------------------------------------------------------
+# Engines: sampled decode vs the sequential oracle
+# ---------------------------------------------------------------------------
+
+
+def _packed(cfg, params):
+    bits = np.asarray([8 if l % 2 == 0 else 4 for l in range(cfg.n_layers)])
+    packed, _, _ = quantize_blocks(
+        cfg, params, bits, QPrunerConfig(), init_adapters=False, pack=True
+    )
+    return packed
+
+
+@pytest.mark.parametrize(
+    "kw,packed",
+    [
+        ({}, False),
+        ({"kv_cache_dtype": "int8"}, False),
+        ({"sliding_window": 6}, False),
+        ({}, True),
+    ],
+    ids=["dense", "int8kv", "windowed", "packed"],
+)
+def test_paged_sampled_decode_matches_oracle(kw, packed):
+    """Mixed per-request specs (greedy lane + two stochastic lanes with
+    penalties/top-k/top-p) through continuous batching == each request
+    decoded alone, across every KV-cache variant."""
+    cfg, params = _smoke(**kw)
+    if packed:
+        params = _packed(cfg, params)
+    prompts = _prompts([3, 10, 7])
+    sps = [
+        SamplingParams(temperature=0.7, top_k=6, seed=1),
+        SamplingParams(),  # greedy lane riding the same compiled step
+        SamplingParams(temperature=1.1, top_p=0.85, repetition_penalty=1.3,
+                       frequency_penalty=0.2, seed=5),
+    ]
+    eng = _paged(cfg, params, max_batch=3)
+    rids = [eng.submit(p, 5, sampling=sp) for p, sp in zip(prompts, sps)]
+    out = eng.run()
+    got = [out[r] for r in rids]
+    assert_matches_oracle(cfg, params, prompts, got, 5, CAP,
+                          prefill_chunk=CHUNK, sampling=sps, rids=rids)
+    assert eng.decode_traces == 1  # sampling state never retraces the step
+
+
+def test_admission_order_invariance():
+    """Property: a fixed (seed, rid) request emits bit-identical tokens
+    alone, in different batch mixes / admission orders, mid-stream, and
+    across a forced preemption-by-recompute — all equal to the oracle."""
+    cfg, params = _smoke()
+    target = _prompts([9])[0]
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=123)
+    runs = {}
+
+    # (a) alone on one lane
+    eng = _paged(cfg, params, max_batch=1)
+    eng.submit(target, 10, sampling=sp, rid=77)
+    runs["alone"] = eng.run()[77]
+
+    # (b) submitted LAST behind two stochastic neighbours, 2 lanes
+    eng = _paged(cfg, params, max_batch=2)
+    for i, p in enumerate(_prompts([5, 7])):
+        eng.submit(p, 6, sampling=SamplingParams(temperature=0.5, seed=i),
+                   rid=i)
+    eng.submit(target, 10, sampling=sp, rid=77)
+    runs["last"] = eng.run()[77]
+
+    # (c) submitted FIRST, neighbours join mid-decode on 3 lanes
+    eng = _paged(cfg, params, max_batch=3)
+    eng.submit(target, 10, sampling=sp, rid=77)
+    for _ in range(2):
+        eng.step()  # target decodes alone for a while
+    for i, p in enumerate(_prompts([4, 11, 6])):
+        eng.submit(p, 5, sampling=SamplingParams(temperature=1.2, top_p=0.9,
+                                                 seed=50 + i), rid=100 + i)
+    runs["staggered"] = eng.run()[77]
+    assert eng.decode_traces == 1
+
+    # (d) pool too small for both → target (youngest) is preempted by
+    # recompute and must resume the identical stream
+    eng = _paged(cfg, params, max_batch=2, num_blocks=6)
+    eng.submit(_prompts([3])[0], 8,
+               sampling=SamplingParams(temperature=0.7, seed=9), rid=0)
+    eng.submit(target, 10, sampling=sp, rid=77)
+    out = eng.run()
+    assert eng.preemptions >= 1
+    runs["preempted"] = out[77]
+
+    for name, r in runs.items():
+        np.testing.assert_array_equal(
+            r, runs["alone"], err_msg=f"run '{name}' diverged")
+    want = oracle_generate(cfg, params, [target], 10, CAP,
+                           prefill_chunk=CHUNK, sampling=[sp], rids=[77])[0]
+    np.testing.assert_array_equal(runs["alone"], want)
+
+
+def test_engine_sampled_decode_reproducible_and_seeded():
+    cfg, params = _smoke()
+    prompts = RNG.integers(0, 512, (2, 9)).astype(np.int32)
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=8, ctx_len=CAP,
+                                          temperature=2.0, seed=3,
+                                          prefill_chunk=CHUNK))
+    a = eng.generate(prompts)
+    np.testing.assert_array_equal(a, eng.generate(prompts))  # same stream
+    b = eng.generate(prompts, sampling=SamplingParams(temperature=2.0, seed=4))
+    assert not np.array_equal(a, b)  # seed moves the stream
+    # rows share the seed but not the rid: lanes are decorrelated
+    assert not np.array_equal(a[0], a[1])
+
+
+def test_max_tokens_and_stop_tokens_bound_the_request():
+    cfg, params = _smoke()
+    p = _prompts([6])[0]
+    ref = oracle_generate(cfg, params, [p], 8, CAP, prefill_chunk=CHUNK)[0]
+    stop = int(ref[3])
+    eng = _paged(cfg, params, max_batch=1)
+    r1 = eng.submit(p, 8, sampling=SamplingParams(max_tokens=2))
+    out1 = eng.run()[r1]
+    np.testing.assert_array_equal(out1, ref[:2])  # truncation, not drift
+    eng = _paged(cfg, params, max_batch=1)
+    r2 = eng.submit(p, 8, sampling=SamplingParams(stop_tokens=(stop,)))
+    out2 = eng.run()[r2]
+    np.testing.assert_array_equal(
+        out2, smp.truncate_at_stop(ref, (stop,)))
+    assert out2[-1] == stop and eng.early_stops == 1
+
+
+def test_generate_rejects_mismatched_sampling_list():
+    cfg, params = _smoke()
+    prompts = _prompts([4, 6, 5])
+    peng = _paged(cfg, params, max_batch=2)
+    with pytest.raises(ValueError, match="sampling specs"):
+        peng.generate(prompts, 4, sampling=[SamplingParams()] * 2)
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=4, ctx_len=CAP))
+    with pytest.raises(ValueError, match="sampling specs"):
+        eng.generate(np.stack([p[:4] for p in prompts]),
+                     sampling=[SamplingParams()] * 2)
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(repetition_penalty=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(max_tokens=0)
+    with pytest.raises(ValueError):
+        SamplingParams(seed=-1)  # lanes store uint32 seeds
+    # SamplingParams is a pytree: numeric knobs are leaves, lifecycle
+    # knobs (max_tokens / stop_tokens) are static metadata
+    leaves = jax.tree.leaves(SamplingParams(temperature=0.5, stop_tokens=(3,)))
+    assert len(leaves) == 6
