@@ -13,6 +13,16 @@ for the paged continuous-batching engine on a mixed-length request set:
   against ``cache_bytes_contiguous``, what the per-request ctx_len
   caches of the contiguous engine would allocate for the same load;
 
+for the paged DECODE attention (``paged_decode`` section): the
+read-in-place Pallas kernel (``kernels/paged_attention.py``) vs the
+gather-materialize fallback (``paged_attn_impl="gather"``) — end-to-end
+tokens/s for each, plus the per-step attention workspace each needs:
+the gather path materializes the whole [B, nmax·bs, Hkv, hd] logical
+KV per layer, the kernel holds one [bs, Hkv, hd] block tile per
+grid step (on CPU hosts the kernel runs in interpret mode, so its
+wall-time is NOT the TPU story — the workspace bytes are the stable
+signal);
+
 and for per-request stochastic decode (``serve.sampling``): end-to-end
 generated tokens/s greedy vs sampled (temperature + top-k + top-p +
 penalties) through the same compiled step — the delta is the in-step
@@ -114,6 +124,42 @@ def _bench_paged(cfg, params, *, lengths, new_tokens, ctx_len, block_size,
     }
 
 
+def _bench_paged_decode(cfg, params, *, lengths, new_tokens, ctx_len,
+                        block_size, max_batch, reps):
+    """Read-in-place kernel vs gather-materialize paged decode.
+
+    Same mixed-length request set through two PagedEngines differing
+    only in ``cfg.paged_attn_impl`` (token streams are identical on the
+    f32 smoke model — the parity suite asserts it; this measures
+    throughput + workspace)."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lengths]
+    out = {}
+    nmax = None
+    for impl in ("kernel", "gather"):
+        eng = PagedEngine(
+            cfg.with_(paged_attn_impl=impl), params,
+            PagedServeConfig(ctx_len=ctx_len, block_size=block_size,
+                             max_batch=max_batch),
+        )
+        eng.generate(prompts, new_tokens)  # compile
+        dt = min(_timed(lambda: eng.generate(prompts, new_tokens))
+                 for _ in range(reps))
+        out[f"{impl}_tok_per_s"] = len(prompts) * new_tokens / dt
+        nmax = eng.nmax
+    # per-step attention workspace (k+v per layer, pool dtype): gather
+    # materializes every lane's whole logical context; the kernel's
+    # VMEM-resident tile is one physical block
+    kv = eng.pools["seg0"]["p0_attn"]
+    item = kv["k"].dtype.itemsize
+    hkv, hd = kv["k"].shape[-2], kv["k"].shape[-1]
+    out["gather_workspace_bytes"] = 2 * max_batch * nmax * block_size * hkv * hd * item
+    out["kernel_workspace_bytes"] = 2 * block_size * hkv * hd * item
+    out["peak_cache_bytes_live"] = eng.stats()["peak_cache_bytes_live"]
+    return out
+
+
 def _bench_sampled(cfg, params, *, batch, prompt_len, new_tokens, reps):
     """Greedy vs sampled end-to-end generation through the Engine loop.
 
@@ -196,6 +242,19 @@ def main():
         f"KV live {r['cache_bytes_live']/1e6:6.2f} MB "
         f"(contiguous would hold {r['cache_bytes_contiguous']/1e6:6.2f} MB — "
         f"{r['cache_bytes_contiguous']/max(r['cache_bytes_live'],1):.2f}x)"
+    )
+
+    results["paged_decode"] = r = _bench_paged_decode(
+        cfg, params, lengths=lengths, new_tokens=new_tokens,
+        ctx_len=paged_ctx, block_size=8 if fast else 16,
+        max_batch=min(4, len(lengths)), reps=3,
+    )
+    print(
+        f"{'paged_decode':12s} kernel  {r['kernel_tok_per_s']:9.1f} tok/s  "
+        f"gather {r['gather_tok_per_s']:9.1f} tok/s  "
+        f"workspace {r['kernel_workspace_bytes']/1e3:.1f} KB vs "
+        f"{r['gather_workspace_bytes']/1e3:.1f} KB "
+        f"({r['gather_workspace_bytes']/max(r['kernel_workspace_bytes'],1):.0f}x)"
     )
 
     results["sampling"] = r = _bench_sampled(

@@ -52,6 +52,28 @@ churns):
   # (live bytes drop back to 0 once run() drains — retired requests
   # release their blocks; peak_* records the high-water mark)
 
+Two serving-path details make this production-shaped rather than a
+demo loop:
+
+- **Read-in-place paged attention** — decode never materializes a
+  request's logical KV out of the block pool. The Pallas kernel
+  (``kernels/paged_attention.py``) streams physical blocks through the
+  scalar-prefetched block table with a flash-style online softmax,
+  masking never-written / stale ring slots to exact zeros and
+  dequantizing int8 KV (per-slot scales) inside the block loop — so
+  per-step attention workspace is one block tile, not
+  ``[B, nmax·bs, Hkv, hd]``. ``cfg.paged_attn_impl = "gather"`` selects
+  the materializing oracle fallback (token-identical;
+  ``benchmarks/serve_bench.py``'s ``paged_decode`` section compares
+  them).
+- **Batched admission** — each scheduler iteration admits every
+  admissible queued request as ONE wave: the wave groups by prompt
+  length and each group runs a single bucketed multi-request prefill
+  (``Engine.generate``'s (B, S) bucketing, so compiled shapes stay
+  bounded), then results scatter into lanes/tables/pools. N same-length
+  arrivals cost one prefill forward, not N
+  (``stats()["prefill_calls"]``).
+
 Packed QTensor params work here too (this file's demo below runs one).
 Tokens are bit-identical to running each request alone through the
 sequential engine — ``tests/serving_oracle.py`` is the differential

@@ -2,10 +2,13 @@
 # Tier-1 CI: the verify command from ROADMAP.md, verbatim — the full
 # pytest pass, which includes the per-request sampling suite
 # (tests/test_sampling.py: counter-based RNG units, sampled-decode
-# oracle parity, admission-order invariance) — then the serving
-# perf/footprint trend check (warn-only; fails only on a >2x regression
-# vs the committed BENCH_serve.json — see check_bench.py; the bench now
-# also records greedy-vs-sampled decode throughput).
+# oracle parity, admission-order invariance, tied-logit truncation) and
+# the paged-attention kernel parity suite (tests/test_paged_attention.py:
+# read-in-place kernel vs gather oracle, interpret mode) — then the
+# serving perf/footprint trend check (warn-only; fails only on a >2x
+# regression vs the committed BENCH_serve.json — see check_bench.py; the
+# bench records greedy-vs-sampled decode throughput AND the paged_decode
+# kernel-vs-gather section: tokens/s + per-step attention workspace).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

@@ -79,6 +79,27 @@ def qmatmul(x: jnp.ndarray, qt: QTensor) -> jnp.ndarray:
     return y.reshape(*lead, N).astype(x.dtype)
 
 
+def paged_decode_attention(q, k_pool, v_pool, tables, ctx_len,
+                           *, k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Read-in-place paged decode attention (serving hot path).
+
+    q [B, 1, Hq, hd]; pools [NB, bs, Hkv, hd] (+ optional int8 scale
+    pools); tables [B, nmax]; ctx_len [B] → [B, 1, Hq, hd] in q's dtype.
+
+    Dispatches to ``kernels.paged_attention`` — the Pallas kernel that
+    streams physical KV blocks through the block table via scalar
+    prefetch instead of materializing the gathered [B, nmax*bs] cache
+    (``kernels.ref.paged_attention_ref`` is the gather oracle).
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    out = paged_attention(
+        q[:, 0], k_pool, v_pool, tables, ctx_len,
+        k_scale=k_scale, v_scale=v_scale, interpret=_INTERPRET,
+    )
+    return out[:, None].astype(q.dtype)
+
+
 def lora_matmul(x, qt: QTensor, a, b, lora_scale: float = 2.0) -> jnp.ndarray:
     """Fused base+adapter matmul; falls back to qmatmul + dense lora."""
     K, N = qt.shape

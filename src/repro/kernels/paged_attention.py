@@ -1,0 +1,184 @@
+"""Read-in-place paged decode-attention Pallas kernel (TPU target).
+
+The paged serving path used to *materialize* each request's logical KV
+out of the physical block pool — ``jnp.take(pool, tables)`` → a dense
+``[B, nmax·bs, Hkv, hd]`` copy per layer per decode step — so peak
+working memory scaled with full context again and HBM bandwidth was
+spent re-copying mostly-stale slots. This kernel streams the pool
+blocks *in place* instead:
+
+- the per-request block table and context lengths ride as **scalar
+  prefetch** operands (:class:`pltpu.PrefetchScalarGridSpec`), so the
+  BlockSpec ``index_map`` routes grid step ``(b, i)`` straight to
+  physical block ``tables[b, i]`` — the DMA reads the pool block where
+  it lives, nothing is gathered into a contiguous copy;
+- softmax is accumulated **online** (flash-style) block by block: a
+  running row max ``m``, normalizer ``l``, and unnormalized output
+  ``acc`` live in VMEM scratch across the ``nmax`` grid steps of one
+  request, normalized once on the last block;
+- slots at logical positions ``>= ctx_len[b]`` (never written, stale
+  ring remainders, or the whole context of an inactive trash-block
+  lane) are masked so they contribute **exact zeros** — the same
+  guarantee the gather path made, so decode stays token-identical to
+  the sequential oracle;
+- int8 KV caches dequantize **inside** the block loop: per-slot absmax
+  scale pools stream alongside the code pools and fold into the scores
+  (k) / probabilities (v) exactly where :func:`~repro.models.layers.
+  decode_attention` folds them — same discipline as the fused weight
+  kernels (``nf4_matmul`` / ``int8_matmul``);
+- GQA: query head ``h`` attends kv head ``h // G``; the head loop is a
+  static unroll over ``Hkv`` 2-D dots.
+
+Layout contract (matches ``transformer.init_paged_attn_cache``):
+  q        [B, Hq, hd]            model dtype (f32/bf16)
+  k/v pool [NB, bs, Hkv, hd]      model dtype or int8 codes
+  k/v scale[NB, bs, Hkv] f32      absmax/127 per slot vector (int8 only)
+  tables   [B, nmax] int32        logical block -> physical block id
+  ctx_len  [B] int32              valid logical slots (0 = inactive lane)
+  out      [B, Hq, hd] f32
+
+On CPU hosts the kernel runs in interpret mode — numerically identical,
+Python-speed — so tests exercise the exact kernel body (same discipline
+as ``kernels/ops.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite: masked scores must survive exp() without NaNs
+
+
+def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, *rest,
+            bs: int, G: int, scale: float, quantized: bool):
+    """One (request b, logical block i) grid step of the online softmax."""
+    if quantized:
+        ks_ref, vs_ref, out_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        out_ref, acc_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [Hq, hd]
+    k = k_ref[0].astype(jnp.float32)  # [bs, Hkv, hd] (int8 codes cast)
+    v = v_ref[0].astype(jnp.float32)
+    Hkv = k.shape[1]
+
+    # scores [Hq, bs]: query head h*G+g vs kv head h (static GQA unroll)
+    s = jnp.concatenate([
+        jax.lax.dot_general(
+            jax.lax.dynamic_slice_in_dim(q, h * G, G, axis=0), k[:, h, :],
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        for h in range(Hkv)
+    ], axis=0) * scale
+    if quantized:  # fold the int8 k dequant factor per (slot, kv head)
+        ks = ks_ref[0].astype(jnp.float32)  # [bs, Hkv]
+        s = s * jnp.repeat(ks.T, G, axis=0)  # [Hq, bs]
+
+    slot = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = slot < ctx_ref[b]  # [1, bs]
+    s = jnp.where(valid, s, NEG_INF)
+
+    # online softmax update (flash): rescale the carried accumulator by
+    # exp(m_old - m_new), add this block's exp(s - m_new) contributions.
+    m_prev = m_ref[...]  # [Hq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # the mask multiply makes never-written / stale slots EXACT zeros
+    # even when every slot so far is masked (m_new == NEG_INF → exp(0))
+    p = jnp.exp(s - m_new) * valid.astype(jnp.float32)  # [Hq, bs]
+    alpha = jnp.exp(m_prev - m_new)
+    if quantized:  # fold the v dequant factor per (slot, kv head)
+        vs = vs_ref[0].astype(jnp.float32)
+        pw = p * jnp.repeat(vs.T, G, axis=0)
+    else:
+        pw = p
+    pv = jnp.concatenate([
+        jax.lax.dot_general(
+            jax.lax.dynamic_slice_in_dim(pw, h * G, G, axis=0), v[:, h, :],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        for h in range(Hkv)
+    ], axis=0)  # [Hq, hd]
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finalize():
+        # fully-masked lanes (ctx_len == 0: inactive trash-block lanes)
+        # have l == 0 → emit exact zeros, never NaN
+        out_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    tables: jnp.ndarray,
+    ctx_len: jnp.ndarray,
+    *,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode attention over paged KV pools, read in place → [B, Hq, hd] f32.
+
+    Grid ``(B, nmax)``; block ``i`` of request ``b`` is DMA'd from
+    physical block ``tables[b, i]`` via scalar-prefetch index maps.
+    Pass both ``k_scale``/``v_scale`` (or neither) — their presence
+    selects the in-loop int8 dequant variant.
+    """
+    B, Hq, hd = q.shape
+    NB, bs, Hkv, _ = k_pool.shape
+    nmax = int(tables.shape[1])
+    if Hq % Hkv:
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got {Hq} % {Hkv}")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    G = Hq // Hkv
+    quantized = k_scale is not None
+    scale = float(1.0 / np.sqrt(hd))
+
+    in_specs = [
+        pl.BlockSpec((1, Hq, hd), lambda b, i, t, c: (b, 0, 0)),
+        pl.BlockSpec((1, bs, Hkv, hd), lambda b, i, t, c: (t[b, i], 0, 0, 0)),
+        pl.BlockSpec((1, bs, Hkv, hd), lambda b, i, t, c: (t[b, i], 0, 0, 0)),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, Hkv), lambda b, i, t, c: (t[b, i], 0, 0)),
+            pl.BlockSpec((1, bs, Hkv), lambda b, i, t, c: (t[b, i], 0, 0)),
+        ]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nmax),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, i, t, c: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq, hd), jnp.float32),  # acc — unnormalized output
+            pltpu.VMEM((Hq, 1), jnp.float32),   # m — running row max
+            pltpu.VMEM((Hq, 1), jnp.float32),   # l — running normalizer
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, G=G, scale=scale, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(ctx_len, jnp.int32), *operands)

@@ -57,6 +57,46 @@ def lora_qmatmul4_ref(x, codes_packed, scales, codebook, block, a, b, lora_scale
     return (base.astype(jnp.float32) + lora_scale * lo).astype(x.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, tables, ctx_len,
+                        k_scale=None, v_scale=None):
+    """Gather-materialize oracle for ``kernels.paged_attention``.
+
+    The path the kernel replaces: gather every request's logical KV out
+    of the block pool into a dense [B, nmax*bs, Hkv, hd] copy, mask
+    slots >= ctx_len to an exact-zero softmax contribution, and attend
+    in one full-row (non-online) f32 softmax. int8 scales fold after
+    the respective dots, mirroring ``layers.decode_attention``.
+
+    q [B, Hq, hd]; k/v_pool [NB, bs, Hkv, hd]; tables [B, nmax] int32;
+    ctx_len [B] int32 → [B, Hq, hd] f32.
+    """
+    B, Hq, hd = q.shape
+    _, bs, Hkv, _ = k_pool.shape
+    G = Hq // Hkv
+
+    def fetch(pool):  # [NB, bs, ...] -> [B, nmax*bs, ...]
+        g = jnp.take(pool, tables, axis=0)
+        return g.reshape((B, tables.shape[1] * bs) + g.shape[3:])
+
+    gk = fetch(k_pool).astype(jnp.float32)
+    gv = fetch(v_pool).astype(jnp.float32)
+    qh = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, gk) * np.float32(1.0 / np.sqrt(hd))
+    if k_scale is not None:
+        s = s * jnp.moveaxis(fetch(k_scale).astype(jnp.float32), 1, 2)[:, :, None, :]
+    valid = jnp.arange(gk.shape[1])[None, :] < jnp.asarray(ctx_len)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (inactive lanes, ctx_len 0) degenerate to a
+    # uniform average under softmax; zero them so the oracle matches the
+    # kernel's exact-zero output for discarded lanes
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    if v_scale is not None:
+        p = p * jnp.moveaxis(fetch(v_scale).astype(jnp.float32), 1, 2)[:, :, None, :]
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, gv)
+    return out.reshape(B, Hq, hd)
+
+
 def quantize4_ref(w, codebook, block: int):
     """W [K, N] → (codes [K, N/2] u8 packed, scales [K, N/block] f32).
 

@@ -206,7 +206,13 @@ def paged_cache_init(cfg: ArchConfig):
 
 def paged_step_fn(cfg: ArchConfig):
     """(params, tokens [B,1], pools, pos [B], pages, adapters=None) →
-    (logits [B,1,V], pools). ``pages`` = {'tables','active','cap'}."""
+    (logits [B,1,V], pools). ``pages`` = {'tables','active','cap'}.
+
+    Attention reads the pools IN PLACE through the block tables
+    (``kernels/paged_attention.py`` — Pallas, scalar-prefetched tables,
+    online softmax, in-loop int8 dequant) unless
+    ``cfg.paged_attn_impl == "gather"`` selects the materializing
+    oracle fallback."""
     if not supports_paged_decode(cfg):
         raise ValueError(f"{cfg.name}: no paged decode for {cfg.block_pattern}")
     return lambda params, tokens, caches, pos, pages, adapters=None: _tf.decode_step(

@@ -123,6 +123,14 @@ class ArchConfig:
     attn_bf16_dots: bool = False
     kv_cache_dtype: str = ""  # "" = model dtype | "int8"
     attn_block_skip: bool = False  # skip fully-masked attention blocks
+    # paged decode attention: "kernel" streams physical KV blocks in
+    # place (Pallas, kernels/paged_attention.py — f32 accumulation
+    # throughout); "gather" materializes the per-request [B, nmax*bs]
+    # copy (the original path, kept as the oracle fallback). Token-
+    # identical on f32 models (the tested configs); bf16 models using
+    # attn_bf16_dots / int8-KV round some dots to bf16 on the gather
+    # path only, so low-order logit bits can differ between impls there.
+    paged_attn_impl: str = "kernel"
 
     @property
     def hd(self) -> int:
@@ -528,7 +536,7 @@ def _attn_decode_contig(cfg, q, k, v, cache, pos, win):
 
 
 def _attn_decode_paged(cfg, q, k, v, cache, ctx, win):
-    """Block-table cache write + gather + attend (paged KV, §serve).
+    """Block-table cache write + read-in-place attend (paged KV, §serve).
 
     ``cache`` holds a physical block POOL shared by every request:
     {'k','v': [NB, bs, Hkv, hd]} (+ int8 scale pools). ``ctx['pages']``
@@ -544,9 +552,27 @@ def _attn_decode_paged(cfg, q, k, v, cache, ctx, win):
     The ring-buffer slot mapping of the contiguous cache generalises
     directly: the logical slot ``pos % S_c`` (windowed) or
     ``min(pos, S_c-1)`` (full) is split into (block, offset) and routed
-    through the table. Gathered slots beyond ``ctx_len`` are masked to
-    NEG_INF before the softmax, so stale pool content contributes an
-    exact 0 — decode is token-identical to the contiguous path.
+    through the table. Slots beyond ``ctx_len`` (never written, or stale
+    ring remainders) contribute an exact 0 to the softmax, so decode is
+    token-identical to the contiguous path.
+
+    Attention dispatches on ``cfg.paged_attn_impl``:
+
+    - ``"kernel"`` (default) — the Pallas read-in-place kernel
+      (``kernels/paged_attention.py``): physical blocks are DMA'd
+      straight from the pool through scalar-prefetched block tables,
+      flash-style online softmax, int8 scales dequantized inside the
+      block loop. Nothing [B, nmax·bs]-shaped is ever materialized.
+    - ``"gather"`` — the original materializing path (``jnp.take`` the
+      whole table, then ``layers.decode_attention``), kept as the
+      oracle fallback; ``kernels.ref.paged_attention_ref`` is its
+      kernel-layout twin for parity tests.
+
+    Numerics: the kernel accumulates in f32 end to end. The gather path
+    matches that on f32 models (token-identical — the parity suite);
+    with ``attn_bf16_dots`` or an int8-KV cache on a bf16 model it
+    rounds the QK/PV dots to bf16, so the two impls can differ in
+    low-order logit bits there (kernel >= gather in precision).
     """
     pg = ctx["pages"]
     tables = pg["tables"]
@@ -564,6 +590,7 @@ def _attn_decode_paged(cfg, q, k, v, cache, ctx, win):
     lb, off = slot // bs, slot % bs
     pb = jnp.take_along_axis(tables, lb[:, None], axis=1)[:, 0]
     ctx_len = jnp.where(active, jnp.minimum(posv + 1, S_c), 0)
+    use_kernel = cfg.paged_attn_impl == "kernel"
 
     def fetch(pool):  # [NB, bs, ...] -> per-request [B, nmax*bs, ...]
         g = jnp.take(pool, tables, axis=0)
@@ -576,16 +603,28 @@ def _attn_decode_paged(cfg, q, k, v, cache, ctx, win):
         cv = cache["v"].at[pb, off].set(vq[:, 0])
         cks = cache["k_scale"].at[pb, off].set(ks[:, 0])
         cvs = cache["v_scale"].at[pb, off].set(vs[:, 0])
-        attn = decode_attention(
-            q, fetch(ck), fetch(cv), ctx_len,
-            k_scale=fetch(cks), v_scale=fetch(cvs),
-        )
+        if use_kernel:
+            from repro.kernels.ops import paged_decode_attention
+
+            attn = paged_decode_attention(
+                q, ck, cv, tables, ctx_len, k_scale=cks, v_scale=cvs
+            )
+        else:
+            attn = decode_attention(
+                q, fetch(ck), fetch(cv), ctx_len,
+                k_scale=fetch(cks), v_scale=fetch(cvs),
+            )
         return attn, {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
     ck = cache["k"].at[pb, off].set(k[:, 0].astype(cache["k"].dtype))
     cv = cache["v"].at[pb, off].set(v[:, 0].astype(cache["v"].dtype))
-    attn = decode_attention(
-        q, fetch(ck), fetch(cv), ctx_len, bf16_dots=cfg.attn_bf16_dots
-    )
+    if use_kernel:
+        from repro.kernels.ops import paged_decode_attention
+
+        attn = paged_decode_attention(q, ck, cv, tables, ctx_len)
+    else:
+        attn = decode_attention(
+            q, fetch(ck), fetch(cv), ctx_len, bf16_dots=cfg.attn_bf16_dots
+        )
     return attn, {"k": ck, "v": cv}
 
 

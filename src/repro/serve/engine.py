@@ -46,7 +46,39 @@ import numpy as np
 from repro.models import model_zoo as zoo
 from repro.serve.sampling import SamplingParams, observe, stack_lanes
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = ["ServeConfig", "Engine", "pad_rows_pow2", "split_prompt_chunks"]
+
+
+def pad_rows_pow2(a: np.ndarray) -> np.ndarray:
+    """Pad axis 0 to the next power of two by repeating row 0.
+
+    Half of the (B, S) bucketing contract shared by ``Engine.generate``
+    and ``PagedEngine`` admission (pad rows are computed row-wise and
+    dropped by the caller, so they never change real rows' results).
+    """
+    B = a.shape[0]
+    Bb = 1 << max(B - 1, 0).bit_length()
+    if Bb == B:
+        return a
+    return np.concatenate([a, np.repeat(a[:1], Bb - B, axis=0)], axis=0)
+
+
+def split_prompt_chunks(prompts: np.ndarray, chunk: int):
+    """Split [B, S] prompts at the largest ``chunk`` multiple.
+
+    → (main [B, k·chunk], rest [B, chunk] right-padded (or [B, 0]),
+    rest_len). The other half of the shared bucketing contract: every
+    prompt length in ``[k·chunk, (k+1)·chunk)`` hits one compiled shape
+    (the rest replays through the step fn under a ``rest_len`` mask).
+    """
+    chunk = max(1, chunk)
+    S = prompts.shape[1]
+    s_main = (S // chunk) * chunk
+    rest_len = S - s_main
+    rest = prompts[:, s_main:]
+    if rest_len:
+        rest = np.pad(rest, ((0, 0), (0, chunk - rest_len)))
+    return prompts[:, :s_main], rest, rest_len
 
 
 @dataclasses.dataclass
@@ -197,21 +229,13 @@ class Engine:
         if rids is None:
             rids = np.arange(B, dtype=np.int32)
         lanes = stack_lanes(sampling, rids)
-        Bb = 1 << max(B - 1, 0).bit_length()  # next power of two ≥ B
-        if Bb > B:
-            prompts = np.concatenate(
-                [prompts, np.repeat(prompts[:1], Bb - B, axis=0)], axis=0
-            )
-            lanes = {k: np.concatenate([v, np.repeat(v[:1], Bb - B, axis=0)])
-                     for k, v in lanes.items()}
-        chunk = max(1, self.scfg.prefill_chunk)
-        s_main = (S // chunk) * chunk
-        rest_len = S - s_main
-        rest = prompts[:, s_main:]
-        if rest_len:
-            rest = np.pad(rest, ((0, 0), (0, chunk - rest_len)))
+        prompts = pad_rows_pow2(prompts)
+        lanes = {k: pad_rows_pow2(v) for k, v in lanes.items()}
+        main, rest, rest_len = split_prompt_chunks(
+            prompts, self.scfg.prefill_chunk
+        )
         out = self._generate(
-            jnp.asarray(prompts[:, :s_main]),
+            jnp.asarray(main),
             jnp.asarray(rest),
             jnp.asarray(rest_len, jnp.int32),
             {k: jnp.asarray(v) for k, v in lanes.items()},

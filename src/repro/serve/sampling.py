@@ -179,27 +179,66 @@ def apply_penalties(logits, counts, repetition, frequency):
     return logits - frequency[:, None] * counts.astype(logits.dtype)
 
 
-def top_k_mask(logits, k):
-    """Mask all but each lane's top-k logits to -inf (k<=0 → disabled)."""
+def _desc_order_ranks(logits):
+    """Descending sort order and per-token rank, ties → lower token id.
+
+    ``jnp.argsort`` is stable, so negating the row makes equal logits
+    sort in ascending token-id order — the deterministic tie order both
+    truncation masks cut by. Returns (order [B, V] — token ids in
+    descending-logit order, ranks [B, V] — each token's position in it).
+    """
+    B, V = logits.shape
+    order = jnp.argsort(-logits, axis=-1)
+    rows = jnp.arange(B)[:, None]
+    ranks = jnp.zeros((B, V), jnp.int32).at[rows, order].set(
+        jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (B, V))
+    )
+    return order, ranks
+
+
+def top_k_mask(logits, k, *, ranks=None):
+    """Mask all but each lane's top-k logits to -inf (k<=0 → disabled).
+
+    The cut is by sorted RANK, not by value threshold: duplicate logits
+    at the k-th value would all survive a ``logits < thr`` test and
+    leave MORE than k candidates. Ties break deterministically toward
+    the lower token id (stable sort), so exactly k tokens remain.
+
+    ``ranks`` — precomputed ``_desc_order_ranks(logits)[1]``, so
+    :func:`sample` pays for ONE vocab sort shared with the top-p mask.
+    """
     V = logits.shape[-1]
     kk = jnp.where(k <= 0, V, jnp.clip(k, 1, V)).astype(jnp.int32)
-    srt = jnp.sort(logits, axis=-1)[:, ::-1]
-    thr = jnp.take_along_axis(srt, kk[:, None] - 1, axis=-1)
-    return jnp.where(logits < thr, -jnp.inf, logits)
+    if ranks is None:
+        _, ranks = _desc_order_ranks(logits)
+    return jnp.where(ranks < kk[:, None], logits, -jnp.inf)
 
 
-def top_p_mask(logits, p):
+def top_p_mask(logits, p, *, order=None):
     """Nucleus mask: keep each lane's smallest prefix of probability mass
-    >= p (p>=1 → disabled; the top-1 token is always kept)."""
-    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    >= p (p>=1 → disabled; the top-1 token is always kept).
+
+    The prefix is cut by sorted rank with the same deterministic tie
+    order as :func:`top_k_mask` — a value threshold would re-admit every
+    duplicate of the crossing logit and overshoot the nucleus.
+
+    ``order`` — a precomputed descending sort order of ``logits`` (or of
+    any rank-prefix mask of them: top-k only -inf's ranks >= k, leaving
+    the kept prefix's order intact), so the sort is shared with top-k.
+    """
+    B, V = logits.shape
+    if order is None:
+        order, _ = _desc_order_ranks(logits)
+    srt = jnp.take_along_axis(logits, order, axis=-1)
     probs = jax.nn.softmax(srt, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     # token kept iff the mass BEFORE it is < p (include the crossing
     # token); p >= 1 keeps everything even when cumsum saturates early
-    keep = ((cum - probs) < p[:, None]) | (p[:, None] >= 1.0)
-    keep = keep.at[:, 0].set(True)
-    thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1)
-    return jnp.where(logits < thr[:, None], -jnp.inf, logits)
+    keep_sorted = ((cum - probs) < p[:, None]) | (p[:, None] >= 1.0)
+    keep_sorted = keep_sorted.at[:, 0].set(True)
+    rows = jnp.arange(B)[:, None]
+    keep = jnp.zeros((B, V), bool).at[rows, order].set(keep_sorted)
+    return jnp.where(keep, logits, -jnp.inf)
 
 
 def sample(logits, samp: dict, pos):
@@ -221,8 +260,11 @@ def sample(logits, samp: dict, pos):
     greedy = jnp.argmax(l, axis=-1).astype(jnp.int32)
     t = samp["temperature"].astype(jnp.float32)
     ls = l / jnp.where(t > 0, t, 1.0)[:, None]
-    ls = top_k_mask(ls, samp["top_k"])
-    ls = top_p_mask(ls, samp["top_p"])
+    # one vocab sort serves both truncations: top-k -inf's exactly the
+    # ranks >= k of this order, so the order stays valid for top-p
+    order, ranks = _desc_order_ranks(ls)
+    ls = top_k_mask(ls, samp["top_k"], ranks=ranks)
+    ls = top_p_mask(ls, samp["top_p"], order=order)
     keys = request_keys(samp["seed"], samp["rid"], pos)
     V = logits.shape[-1]
     g = jax.vmap(lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)

@@ -14,9 +14,19 @@ replaces both halves:
   of re-uploading a host table every decode step.
 - **Continuous batching** — :class:`PagedEngine` keeps ``max_batch``
   decode *lanes*. Between decode steps it admits queued requests into
-  free lanes (per-request prefill → block-table insert) and retires
-  finished ones, all against ONE jitted decode step of fixed shape — no
-  recompile as the request mix changes (``decode_traces`` counts).
+  free lanes and retires finished ones, all against ONE jitted decode
+  step of fixed shape — no recompile as the request mix changes
+  (``decode_traces`` counts). Admission is BATCHED: every admissible
+  queued request in a scheduler iteration joins one *wave*, the wave is
+  grouped by prompt length, and each group runs ONE bucketed
+  multi-request prefill (the same (B, S) bucketing as
+  ``Engine.generate`` — batch padded to a power of two, prompt split at
+  the largest ``prefill_chunk`` multiple — so ``prefill_traces`` stays
+  bounded while ``prefill_calls`` drops from one-per-request to
+  one-per-group); the per-request results then scatter into
+  lanes/tables/pools. Decode itself reads the KV pools IN PLACE through
+  the block tables (``kernels/paged_attention.py``) instead of
+  materializing a gathered [B, nmax·bs] copy per layer per step.
 
 Exactness: lanes are independent — attention gathers through each lane's
 own table, inactive lanes read a zero-length context and write into the
@@ -51,6 +61,7 @@ import numpy as np
 
 from repro.models import model_zoo as zoo
 from repro.serve import sampling as smp
+from repro.serve.engine import pad_rows_pow2, split_prompt_chunks
 from repro.serve.sampling import GREEDY, SamplingParams
 
 __all__ = ["PagedServeConfig", "BlockAllocator", "Request", "PagedEngine"]
@@ -105,15 +116,39 @@ class BlockAllocator:
             raise ValueError("need at least one block besides the trash block")
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))  # pop() → low ids first
+        self._owned: set[int] = set()  # ids currently allocated to requests
 
     def alloc(self, n: int) -> Optional[list[int]]:
         """n fresh block ids, or None (all-or-nothing) if the pool is dry."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        self._owned.update(out)
+        return out
 
     def release(self, ids: list[int]) -> None:
-        self._free.extend(ids)
+        """Return blocks to the free list.
+
+        Validates ownership: a double free (or releasing the reserved
+        trash block) would append an id the free list already holds —
+        one physical block handed to two requests later. All-or-nothing:
+        nothing is released if any id is invalid.
+        """
+        ids = list(ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate block ids in release: {sorted(ids)}")
+        for i in ids:
+            if i == TRASH_BLOCK:
+                raise ValueError(
+                    f"cannot release the reserved trash block {TRASH_BLOCK}"
+                )
+            if i not in self._owned:
+                raise ValueError(
+                    f"double free: block {i} is not currently allocated"
+                )
+        for i in ids:
+            self._owned.discard(i)
+            self._free.append(i)
 
     @property
     def n_free(self) -> int:
@@ -144,8 +179,14 @@ class PagedEngine:
         nb = pcfg.num_blocks or (pcfg.max_batch * self.nmax + 1)
         self.allocator = BlockAllocator(nb)
         self.pools = zoo.paged_cache_init(cfg)(cfg, nb, bs)
-        self.block_bytes = sum(
-            leaf.nbytes // nb for leaf in jax.tree.leaves(self.pools)
+        # byte accounting: keep the WHOLE pool footprint and derive live
+        # bytes as pool_bytes * n_used // nb (multiply, then ONE divide)
+        # — per-leaf `nbytes // nb` flooring would drop the sub-block
+        # remainder of every leaf (the int8 scale pools especially) and
+        # undercount *_bytes_live / *_bytes_allocated vs the true
+        # jax.tree byte sum.
+        self.pool_bytes = int(
+            sum(int(leaf.nbytes) for leaf in jax.tree.leaves(self.pools))
         )
         M = pcfg.max_batch
         # block tables live on device; admit/grow/retire patch rows in
@@ -175,6 +216,10 @@ class PagedEngine:
         # compiled shape, so these count compilations, not calls.
         self.decode_traces = 0
         self.prefill_traces = 0
+        # host-side call counter: one per admission GROUP (a wave of
+        # same-length admissible requests shares one bucketed prefill),
+        # not one per request — the batched-admission regression hook.
+        self.prefill_calls = 0
 
         pstep = zoo.paged_step_fn(cfg)
         sample = zoo.sampler_fn(cfg)
@@ -203,9 +248,11 @@ class PagedEngine:
 
         def _prefill(params, tok_main, tok_rest, rest_len):
             # identical bucketing scheme to Engine._generate so the
-            # sequential oracle is bit-identical per request
+            # sequential oracle is bit-identical per request; batched
+            # over an admission group (every row-wise op makes row j of
+            # a batch-B prefill bit-identical to its batch-1 run)
             self.prefill_traces += 1
-            caches = zoo.cache_init(cfg)(cfg, 1, cap)
+            caches = zoo.cache_init(cfg)(cfg, tok_main.shape[0], cap)
             if tok_main.shape[1] > 0:
                 logits, caches = prefill(params, tok_main, caches,
                                          adapters=adapters)
@@ -213,7 +260,8 @@ class PagedEngine:
                 logits = logits.astype(cfg.jdtype)
             else:
                 pos = jnp.asarray(0, jnp.int32)
-                logits = jnp.zeros((1, cfg.vocab_size), cfg.jdtype)
+                logits = jnp.zeros((tok_main.shape[0], cfg.vocab_size),
+                                   cfg.jdtype)
             if tok_rest.shape[1] > 0:
                 def body(carry, inp):
                     t, i = inp
@@ -275,10 +323,17 @@ class PagedEngine:
         return req.remaining <= 0 or req.stopped
 
     def _admit(self) -> int:
-        admitted = 0
-        for lane in range(self.pcfg.max_batch):
-            if self.lanes[lane] is not None or not self.queue:
-                continue
+        """Admit every admissible queued request as one batched wave.
+
+        FIFO: requests leave the queue head while a free lane AND their
+        blocks are available (all-or-nothing alloc); the first failure
+        stops admission for this iteration. The wave is grouped by
+        prompt length and each group runs ONE bucketed multi-request
+        prefill (``_admit_group``) instead of one prefill per request.
+        """
+        wave: list[Request] = []
+        free = [l for l in range(self.pcfg.max_batch) if self.lanes[l] is None]
+        while free and self.queue:
             req = self.queue[0]
             S = int(req.prompt.size)
             na = -(-min(S, self.logical_len) // self.pcfg.block_size)
@@ -286,54 +341,89 @@ class PagedEngine:
             if blocks is None:
                 break  # wait for retirements to free blocks
             self.queue.popleft()
-            chunk = max(1, self.pcfg.prefill_chunk)
-            s_main = (S // chunk) * chunk
-            rest_len = S - s_main
-            rest = req.prompt[None, s_main:]
-            if rest_len:
-                rest = np.pad(rest, ((0, 0), (0, chunk - rest_len)))
-            logits, caches = self._prefill(
-                self.params,
-                jnp.asarray(req.prompt[None, :s_main]),
-                jnp.asarray(rest),
-                jnp.asarray(rest_len, jnp.int32),
-            )
-            brow = np.zeros((self.nmax,), np.int32)
-            brow[:na] = blocks
-            self.pools = self._insert(
-                self.pools, caches, jnp.asarray(brow), jnp.asarray(S, jnp.int32)
-            )
-            # per-lane sampling state: scatter the request's spec and its
-            # prompt histogram, then draw the first token at position S
-            # through the same sampler the compiled step uses
-            row = smp.stack_lanes([req.sampling], [req.rid])
-            cnts = smp.prompt_counts(self.cfg.vocab_size, req.prompt)
-            tok0 = int(np.asarray(self._sample1(
-                logits,
-                {**{k: jnp.asarray(v) for k, v in row.items()},
-                 "counts": jnp.asarray(cnts[None])},
-                jnp.asarray([S], jnp.int32),
-            ))[0])
-            cnts[tok0] += 1
-            req.lane, req.blocks = lane, list(blocks)
+            req.lane = free.pop(0)
+            req.blocks = list(blocks)
+            # admit_seq follows FIFO wave order, NOT per-group order —
+            # preemption evicts the max admit_seq as "youngest", so
+            # assigning inside the length groups would mis-rank requests
+            # across groups
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
+            wave.append(req)
+        if not wave:
+            return 0
+        groups: dict[int, list[Request]] = {}
+        for req in wave:
+            groups.setdefault(int(req.prompt.size), []).append(req)
+        for S, reqs in groups.items():
+            self._admit_group(S, reqs)
+        self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
+        return len(wave)
+
+    def _admit_group(self, S: int, reqs: list[Request]) -> None:
+        """One bucketed prefill for same-length requests, then scatter.
+
+        Reuses ``Engine.generate``'s (B, S) bucketing helpers —
+        :func:`~repro.serve.engine.pad_rows_pow2` (pad rows repeat row 0
+        and are dropped) and :func:`~repro.serve.engine.
+        split_prompt_chunks` — so the compiled-prefill set stays bounded
+        (``prefill_traces``) while a whole admission group costs ONE
+        forward (``prefill_calls``). Row-wise bit-exactness of the
+        batched forward keeps every request token-identical to its solo
+        sequential-oracle run.
+        """
+        prompts = pad_rows_pow2(np.stack([r.prompt for r in reqs]))
+        rows = {k: pad_rows_pow2(v)
+                for k, v in smp.stack_lanes([r.sampling for r in reqs],
+                                            [r.rid for r in reqs]).items()}
+        cnts = pad_rows_pow2(
+            np.stack([smp.prompt_counts(self.cfg.vocab_size, r.prompt)
+                      for r in reqs])
+        )
+        main, rest, rest_len = split_prompt_chunks(
+            prompts, self.pcfg.prefill_chunk
+        )
+        self.prefill_calls += 1
+        logits, caches = self._prefill(
+            self.params,
+            jnp.asarray(main),
+            jnp.asarray(rest),
+            jnp.asarray(rest_len, jnp.int32),
+        )
+        # first-token draws for the whole group at position S, through
+        # the same sampler the compiled step uses (row-wise: pad lanes
+        # redraw row 0 and are dropped)
+        toks0 = np.asarray(self._sample1(
+            logits,
+            {**{k: jnp.asarray(v) for k, v in rows.items()},
+             "counts": jnp.asarray(cnts)},
+            jnp.full((prompts.shape[0],), S, jnp.int32),
+        ))
+        for j, req in enumerate(reqs):
+            lane = req.lane
+            brow = np.zeros((self.nmax,), np.int32)
+            brow[: len(req.blocks)] = req.blocks
+            self.pools = self._insert(
+                self.pools,
+                jax.tree.map(lambda a, j=j: a[:, j:j + 1], caches),
+                jnp.asarray(brow),
+                jnp.asarray(S, jnp.int32),
+            )
+            tok0 = int(toks0[j])
+            cnt = cnts[j].copy()
+            cnt[tok0] += 1
             req.emitted.append(tok0)
             self.lanes[lane] = req
             self.tables = self.tables.at[lane].set(jnp.asarray(brow))
-            self.counts = self.counts.at[lane].set(jnp.asarray(cnts))
-            for k, v in row.items():
-                self.samp[k][lane] = v[0]
+            self.counts = self.counts.at[lane].set(jnp.asarray(cnt))
+            for k, v in rows.items():
+                self.samp[k][lane] = v[j]
             self._samp_dev = None
             self.pos[lane] = S
             self.active[lane] = True
             self.last_tok[lane] = tok0
-            admitted += 1
             if self._finished(req):
                 self._retire(lane)
-        if admitted:
-            self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
-        return admitted
 
     def _retire(self, lane: int) -> None:
         """Free the lane NOW — on budget exhaustion or a stop token —
@@ -467,19 +557,23 @@ class PagedEngine:
 
     def stats(self) -> dict:
         nb = self.allocator.num_blocks
+        # bytes derive from ONE division of the summed pool footprint
+        # (multiply-then-divide), so allocated == the jax.tree byte sum
+        # exactly and live/peak carry no per-leaf flooring error
         return {
             "num_blocks": nb,
             "block_size": self.pcfg.block_size,
             "blocks_in_use": self.allocator.n_used,
-            "cache_bytes_allocated": nb * self.block_bytes,
-            "cache_bytes_live": self.allocator.n_used * self.block_bytes,
+            "cache_bytes_allocated": self.pool_bytes,
+            "cache_bytes_live": self.pool_bytes * self.allocator.n_used // nb,
             "peak_blocks_live": self.peak_blocks_live,
-            "peak_cache_bytes_live": self.peak_blocks_live * self.block_bytes,
+            "peak_cache_bytes_live": self.pool_bytes * self.peak_blocks_live // nb,
             "decode_steps": self.decode_steps,
             "preemptions": self.preemptions,
             "early_stops": self.early_stops,
             "decode_traces": self.decode_traces,
             "prefill_traces": self.prefill_traces,
+            "prefill_calls": self.prefill_calls,
         }
 
     def contiguous_cache_bytes(self, n_requests: int) -> int:

@@ -174,6 +174,125 @@ def test_block_allocator_reserves_trash_block():
     assert a.n_free == 2 and a.n_used == 2
 
 
+def test_block_allocator_rejects_double_free_and_trash():
+    """Regression: release() used to silently extend the free list, so a
+    double-freed id (or trash block 0) appeared twice and one physical
+    block could be handed to two requests."""
+    a = BlockAllocator(6)
+    ids = a.alloc(3)
+    a.release(ids[:1])
+    with pytest.raises(ValueError, match="double free"):
+        a.release([ids[0]])  # already back in the pool
+    with pytest.raises(ValueError, match="trash"):
+        a.release([0])  # the reserved trash block is never owned
+    with pytest.raises(ValueError, match="duplicate"):
+        a.release([ids[1], ids[1]])  # double free within one call
+    with pytest.raises(ValueError, match="double free"):
+        a.release([99])  # never allocated at all
+    # failed releases were all-or-nothing: state is uncorrupted and
+    # every re-allocated id is unique
+    a.release(ids[1:])
+    got = a.alloc(a.n_free)
+    assert len(set(got)) == len(got) and 0 not in got
+    assert a.n_free == 0 and a.n_used == 5
+
+
+def test_batched_admission_issues_one_prefill_for_the_wave():
+    """An admission wave of same-length requests runs ONE bucketed
+    multi-request prefill (prefill_calls), compiled once
+    (prefill_traces), and every stream still matches the solo oracle."""
+    rng = np.random.default_rng(101)  # local stream
+    cfg, params = _smoke()
+    prompts = [rng.integers(0, 512, (7,)).astype(np.int32) for _ in range(4)]
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=4,
+                         prefill_chunk=CHUNK),
+    )
+    rids = [eng.submit(p, 4) for p in prompts]
+    eng.step()  # the whole wave admits here
+    st = eng.stats()
+    assert st["prefill_calls"] == 1, st["prefill_calls"]
+    assert st["prefill_traces"] == 1
+    assert all(r is not None for r in eng.lanes)
+    out = eng.run()
+    assert_matches_oracle(cfg, params, prompts, [out[r] for r in rids],
+                          4, CAP, prefill_chunk=CHUNK)
+    assert eng.decode_traces == 1
+    assert eng.stats()["prefill_calls"] == 1  # no further prefills
+
+
+def test_batched_admission_groups_ragged_wave_by_length():
+    """Mixed-length wave: one bucketed prefill per distinct prompt
+    length (NOT per request), all token-exact vs the oracle."""
+    rng = np.random.default_rng(102)
+    cfg, params = _smoke()
+    lengths = [5, 5, 9, 9]  # two groups
+    prompts = [rng.integers(0, 512, (n,)).astype(np.int32) for n in lengths]
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=4,
+                         prefill_chunk=CHUNK),
+    )
+    rids = [eng.submit(p, 4) for p in prompts]
+    eng.step()
+    assert eng.stats()["prefill_calls"] == 2  # one per length group
+    out = eng.run()
+    assert_matches_oracle(cfg, params, prompts, [out[r] for r in rids],
+                          4, CAP, prefill_chunk=CHUNK)
+
+
+def test_batched_admission_sampled_wave_matches_oracle():
+    """Per-request stochastic specs admitted in one wave: the batched
+    first-token draw and batched prefill stay bit-exact per request."""
+    rng = np.random.default_rng(103)
+    cfg, params = _smoke()
+    prompts = [rng.integers(0, 512, (6,)).astype(np.int32) for _ in range(3)]
+    sps = [
+        SamplingParams(temperature=0.8, top_k=5, seed=21),
+        SamplingParams(),  # greedy lane in the same wave
+        SamplingParams(temperature=1.2, top_p=0.9, repetition_penalty=1.2,
+                       seed=22),
+    ]
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=3,
+                         prefill_chunk=CHUNK),
+    )
+    rids = [eng.submit(p, 5, sampling=sp) for p, sp in zip(prompts, sps)]
+    eng.step()
+    assert eng.stats()["prefill_calls"] == 1  # 3 requests pad to one B=4 call
+    out = eng.run()
+    assert_matches_oracle(cfg, params, prompts, [out[r] for r in rids],
+                          5, CAP, prefill_chunk=CHUNK, sampling=sps,
+                          rids=rids)
+
+
+def test_block_byte_accounting_matches_tree_byte_sum():
+    """Regression: per-leaf ``nbytes // nb`` flooring undercounted the
+    pool footprint; the stats must equal the jax.tree byte sums with one
+    division of the summed total."""
+    for kw in ({}, {"kv_cache_dtype": "int8"}):
+        cfg, params = _smoke(**kw)
+        eng = PagedEngine(
+            cfg, params,
+            PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=2,
+                             prefill_chunk=CHUNK),
+        )
+        tree_bytes = sum(int(l.nbytes) for l in jax.tree.leaves(eng.pools))
+        st = eng.stats()
+        assert st["cache_bytes_allocated"] == tree_bytes
+        nb = eng.allocator.num_blocks
+        rng = np.random.default_rng(104)
+        eng.submit(rng.integers(0, 512, (9,)).astype(np.int32), 4)
+        eng.step()
+        used = eng.allocator.n_used
+        assert used > 0
+        assert eng.stats()["cache_bytes_live"] == tree_bytes * used // nb
+        assert eng.stats()["peak_cache_bytes_live"] >= \
+            eng.stats()["cache_bytes_live"]
+
+
 # ---------------------------------------------------------------------------
 # Engine prompt bucketing: bounded compiled shapes (retrace regression)
 # ---------------------------------------------------------------------------

@@ -86,6 +86,60 @@ def test_top_p_mask_matches_reference():
     assert np.isfinite(got[3]).sum() == 1  # p=0 degenerates to greedy
 
 
+def test_top_k_mask_tied_boundary_keeps_exactly_k():
+    """Regression: duplicate logits AT the k-th value used to all pass
+    the value-threshold cut, keeping more than k candidates. The rank
+    cut keeps exactly k, ties resolved toward the lower token id."""
+    rng = np.random.default_rng(42)  # local stream (never the module RNG)
+    x = rng.normal(size=(2, V)).astype(np.float32)
+    x[0, 10:20] = 7.0  # 10-way tie, strictly above everything else
+    x[1, :] = 0.0  # fully degenerate row: every logit tied
+    k = np.asarray([4, 3], np.int32)
+    got = np.asarray(smp.top_k_mask(jnp.asarray(x), jnp.asarray(k)))
+    # exactly k survive, and deterministically the lowest tied token ids
+    np.testing.assert_array_equal(np.nonzero(np.isfinite(got[0]))[0],
+                                  np.arange(10, 14))
+    np.testing.assert_array_equal(np.nonzero(np.isfinite(got[1]))[0],
+                                  np.arange(3))
+
+
+def test_top_p_mask_tied_boundary_cuts_nucleus_by_rank():
+    """Regression: duplicates of the crossing logit used to re-enter via
+    the value threshold, overshooting the nucleus (uniform logits kept
+    the WHOLE vocab at any p). Rank cut keeps the smallest prefix."""
+    x = np.zeros((1, V), np.float32)  # uniform: every token has mass 1/V
+    got = np.asarray(smp.top_p_mask(jnp.asarray(x), jnp.asarray([0.5], np.float32)))
+    kept = np.nonzero(np.isfinite(got[0]))[0]
+    # smallest prefix with mass >= 0.5 is exactly V/2 tokens, and the
+    # deterministic tie order selects the lowest token ids
+    np.testing.assert_array_equal(kept, np.arange(V // 2))
+    # a 3-way tie exactly at the crossing point: only the tied copies
+    # needed to reach p survive
+    y = np.full((1, V), -20.0, np.float32)
+    y[0, 5] = y[0, 9] = y[0, 30] = 5.0  # ~1/3 mass each
+    got = np.asarray(smp.top_p_mask(jnp.asarray(y), jnp.asarray([0.5], np.float32)))
+    np.testing.assert_array_equal(np.nonzero(np.isfinite(got[0]))[0], [5, 9])
+
+
+def test_tied_masks_keep_draws_admission_order_invariant():
+    """A tied-logit row drawn through sample() stays a pure function of
+    (seed, rid, pos) — the deterministic tie order cannot depend on lane
+    placement or batch shape."""
+    rng = np.random.default_rng(43)
+    x = rng.normal(size=(3, V)).astype(np.float32)
+    x[:, 8:16] = 4.0  # shared 8-way tie at the top in every row
+    samp = _samp(3, temperature=0.9, top_k=4, top_p=0.8, seed=17)
+    pos = jnp.asarray([5, 6, 7], jnp.int32)
+    full = np.asarray(smp.sample(jnp.asarray(x), samp, pos))
+    for i in range(3):
+        s1 = {k: v[i:i + 1] for k, v in samp.items()}
+        s1["rid"] = jnp.asarray([i], jnp.int32)
+        alone = np.asarray(smp.sample(jnp.asarray(x[i:i + 1]), s1, pos[i:i + 1]))
+        assert alone[0] == full[i]
+    # every draw lands inside the k=4 deterministic tie prefix
+    assert all(t in range(8, 12) for t in full)
+
+
 def test_penalties_match_reference_and_default_to_noop():
     x = RNG.normal(size=(3, V)).astype(np.float32)
     counts = RNG.integers(0, 4, (3, V)).astype(np.int32)
