@@ -23,6 +23,13 @@ grid step (on CPU hosts the kernel runs in interpret mode, so its
 wall-time is NOT the TPU story — the workspace bytes are the stable
 signal);
 
+for packed mixed-precision execution (``packed_scan`` section): trace
+time and HLO module size of the one-token decode step vs depth, under
+``packed_exec="scan"`` (one ``lax.scan`` per bit-homogeneous layer
+group — HLO bound by the group count, ≤3 here) and ``"unroll"`` (the
+per-layer oracle — HLO linear in depth). Lowering only, no compile, so
+the numbers are backend-independent;
+
 and for per-request stochastic decode (``serve.sampling``): end-to-end
 generated tokens/s greedy vs sampled (temperature + top-k + top-p +
 penalties) through the same compiled step — the delta is the in-step
@@ -160,6 +167,50 @@ def _bench_paged_decode(cfg, params, *, lengths, new_tokens, ctx_len,
     return out
 
 
+def _bench_packed_scan(base_cfg, *, depths, reps):
+    """Trace time + HLO module size of the packed decode step vs depth.
+
+    For each depth, a banded 3-group bit allocation (8-bit head/tail,
+    4-bit middle) is packed and the jitted one-token step is LOWERED
+    (traced, not compiled — cheap and backend-independent) under both
+    ``packed_exec`` modes. Scan HLO holds one scan body per bit group,
+    so its size should be depth-independent; the unrolled oracle grows
+    linearly. Warn-only in ``scripts/check_bench.py`` — HLO text size
+    shifts with jax versions, the signal is the scan-vs-unroll and
+    depth-growth ratios."""
+    out = {}
+    qcfg = QPrunerConfig()
+    from repro.core.mixed_precision import group_schedule
+
+    for depth in depths:
+        cfg = base_cfg.with_(n_layers=depth)
+        params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+        bits = np.full(depth, 4)
+        band = max(1, depth // 4)
+        bits[:band] = 8
+        bits[-band:] = 8  # 3 groups at any depth >= 3
+        assert len(group_schedule(bits)) == 3, (depth, bits)
+        packed, _, _ = quantize_blocks(
+            cfg, params, bits, qcfg, init_adapters=False, pack=True
+        )
+        caches = zoo.cache_init(cfg)(cfg, 2, 32)
+        toks = jnp.zeros((2, 1), jnp.int32)
+        for mode in ("scan", "unroll"):
+            step_cfg = cfg.with_(packed_exec=mode)
+            lowered = None
+
+            def trace():
+                nonlocal lowered
+                lowered = jax.jit(zoo.serve_step_fn(step_cfg)).lower(
+                    packed, toks, caches, jnp.asarray(0, jnp.int32)
+                )
+
+            t = min(_timed(trace) for _ in range(reps))
+            out[f"L{depth}_{mode}_trace_s"] = t
+            out[f"L{depth}_{mode}_hlo_bytes"] = len(lowered.as_text())
+    return out
+
+
 def _bench_sampled(cfg, params, *, batch, prompt_len, new_tokens, reps):
     """Greedy vs sampled end-to-end generation through the Engine loop.
 
@@ -255,6 +306,25 @@ def main():
         f"workspace {r['kernel_workspace_bytes']/1e3:.1f} KB vs "
         f"{r['gather_workspace_bytes']/1e3:.1f} KB "
         f"({r['gather_workspace_bytes']/max(r['kernel_workspace_bytes'],1):.0f}x)"
+    )
+
+    depths = (8, 16)
+    results["packed_scan"] = r = _bench_packed_scan(cfg, depths=depths, reps=2)
+    for d in depths:
+        print(
+            f"{'packed_scan':12s} L={d:<3d} scan "
+            f"{r[f'L{d}_scan_hlo_bytes']/1e3:8.1f} kB HLO "
+            f"({r[f'L{d}_scan_trace_s']*1e3:6.1f} ms trace)  unroll "
+            f"{r[f'L{d}_unroll_hlo_bytes']/1e3:8.1f} kB "
+            f"({r[f'L{d}_unroll_trace_s']*1e3:6.1f} ms)"
+        )
+    d0, d1 = depths[0], depths[-1]
+    print(
+        f"{'packed_scan':12s} depth {d0}->{d1}: scan HLO x"
+        f"{r[f'L{d1}_scan_hlo_bytes']/r[f'L{d0}_scan_hlo_bytes']:.2f} "
+        f"(groups-bound), unroll x"
+        f"{r[f'L{d1}_unroll_hlo_bytes']/r[f'L{d0}_unroll_hlo_bytes']:.2f} "
+        f"(depth-bound)"
     )
 
     results["sampling"] = r = _bench_sampled(

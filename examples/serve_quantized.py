@@ -16,7 +16,7 @@ Two quantized serving modes exist:
   deployment, scan-friendly, and differentiable — this is the fine-tune
   parity path. No runtime bytes are saved.
 - **Packed** (``quantize_blocks(..., pack=True)``): kernel-eligible
-  weights become per-layer ``QTensor``s inside ``PackedStack``s — packed
+  weights become ``QTensor``s inside grouped ``PackedStack``s — packed
   4-bit codes / int8 codes + blockwise (double-quantized) scales at the
   layer's allocated bit width. ``serve.engine.Engine`` accepts these
   directly: every base matmul dispatches to the fused Pallas
@@ -24,6 +24,39 @@ Two quantized serving modes exist:
   ONE chunked batched forward that fills the KV caches, and weight
   storage is the real ≈bits/8 B/param (check it with
   ``core.quantization.measured_weight_bytes``).
+
+Grouped bit-homogeneous stacks (scan-able mixed precision)
+----------------------------------------------------------
+A mixed allocation can't live in one stacked array (4-bit and 8-bit
+layers store different shapes), and a stack of heterogeneous per-layer
+tensors can't be ``lax.scan``'d — the old packed path therefore
+unrolled every layer into the HLO, so compile cost grew with depth,
+exactly where QPruner's memory savings matter most. ``quantize_blocks``
+now groups CONTIGUOUS runs of equal-bit layers into one homogeneous
+stacked ``QTensor`` per run (stacked codes + stacked scales; 16-bit
+runs stay plain dense stacks), with a static schedule of
+``(bit, start, length)`` triples from
+``core.mixed_precision.group_schedule``. With
+``cfg.packed_exec = "scan"`` (the default) the model runs ONE
+``lax.scan`` per group — the scan body slices a per-layer ``QTensor``
+out of the stack and fires a single fused kernel per matmul — so HLO
+size and trace time are bound by the number of groups (≤3 for a banded
+allocation), not the number of layers. ``packed_exec = "unroll"``
+keeps the per-layer loop as the bit-exact parity oracle
+(``tests/test_packed_serving.py`` asserts scan == unroll down to the
+bit for forward / prefill / decode, including the paged engine).
+
+Why do ALTERNATING bit vectors compile slower than banded ones?
+``[4,8,4,8,...]`` has a group per layer — the scan degenerates to one
+one-step scan per layer and compiles like the unroll (the BO search's
+byte model is order-free, so when two allocations tie on memory,
+prefer the banded one). ``[8,8,4,...,4,8,8]`` has 3 groups at ANY
+depth: ``benchmarks/serve_bench.py``'s ``packed_scan`` section records
+the HLO staying flat from 8 to 16 layers under scan while the unroll
+doubles. ``python -m repro.launch.serve --bits-artifact bits.json``
+prints the schedule (``groups: [(4, 0, 10), (8, 10, 2), ...]``) next
+to the measured weight bytes, and ``--packed-exec unroll`` swaps in
+the oracle.
 
 Mixed allocations from the BO search serve the same way:
 

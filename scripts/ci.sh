@@ -7,8 +7,11 @@
 # read-in-place kernel vs gather oracle, interpret mode) — then the
 # serving perf/footprint trend check (warn-only; fails only on a >2x
 # regression vs the committed BENCH_serve.json — see check_bench.py; the
-# bench records greedy-vs-sampled decode throughput AND the paged_decode
-# kernel-vs-gather section: tokens/s + per-step attention workspace).
+# bench records greedy-vs-sampled decode throughput, the paged_decode
+# kernel-vs-gather section (tokens/s + per-step attention workspace),
+# and the packed_scan section: trace time + HLO size of the packed
+# decode step vs depth under packed_exec scan/unroll — *_hlo_bytes and
+# *_trace_s keys are trend-only, never hard-gated).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

@@ -26,7 +26,15 @@ import numpy as np
 
 from repro.core.quantization import QuantConfig
 
-__all__ = ["LayerShapes", "MemoryModel", "allocate_bits", "BitVector"]
+__all__ = [
+    "LayerShapes",
+    "MemoryModel",
+    "allocate_bits",
+    "BitVector",
+    "GroupSchedule",
+    "bits_to_key",
+    "group_schedule",
+]
 
 BitVector = np.ndarray  # int array [L] with entries in {4, 8}
 
@@ -135,3 +143,30 @@ def allocate_bits(
 
 def bits_to_key(bits: BitVector) -> tuple[int, ...]:
     return tuple(int(b) for b in bits)
+
+
+GroupSchedule = tuple[tuple[int, int, int], ...]  # ((bit, start, length), ...)
+
+
+def group_schedule(bits: BitVector) -> GroupSchedule:
+    """Static scan-group schedule of a per-layer bit vector.
+
+    Contiguous runs of equal bit width collapse into one entry
+    ``(bit, start, length)`` — the schedule the packed serving path
+    ``lax.scan``s over (one homogeneous stacked QTensor per group), so
+    HLO/trace cost is proportional to ``len(group_schedule(bits))``
+    instead of ``len(bits)``. A banded allocation (e.g. 8-bit head and
+    tail, 4-bit middle) yields ≤3 groups; a fully alternating vector
+    degenerates to one group per layer (compiles like the unrolled
+    path — see ``examples/serve_quantized.py``).
+    """
+    key = bits_to_key(bits)
+    if not key:
+        return ()
+    sched: list[tuple[int, int, int]] = []
+    start = 0
+    for i in range(1, len(key) + 1):
+        if i == len(key) or key[i] != key[start]:
+            sched.append((key[start], start, i - start))
+            start = i
+    return tuple(sched)

@@ -161,7 +161,14 @@ def _fake_quant_mixed(w: jnp.ndarray, bits_vec: np.ndarray, qcfg: QPrunerConfig)
     simulated quantization is numerically identical, paper §2.1).
     """
     n = w.shape[0]
-    bits_vec = np.resize(bits_vec, n)
+    bits_vec = np.asarray(bits_vec)
+    if bits_vec.shape != (n,):
+        # a short vector must not silently tile/wrap around (np.resize
+        # would repeat it and mis-assign bits to the tail layers)
+        raise ValueError(
+            f"bits_vec has {bits_vec.size} entries for a stacked weight of "
+            f"{n} layers"
+        )
     q4 = _fake_quant(w, qcfg.codebook4, qcfg)
     q8 = _fake_quant(w, qcfg.codebook8, qcfg)
     sel = jnp.asarray(bits_vec).reshape((n,) + (1,) * (w.ndim - 1))
@@ -188,16 +195,31 @@ def quantize_blocks(
     Q ← q(W − AB); A,B ← SVD_r(W − Q) per layer, batched over the stack.
 
     ``pack=True`` (serving path): kernel-eligible weights (see
-    ``_PACKABLE``) are emitted as :class:`PackedStack`s of genuine
-    per-layer ``QTensor``s — packed 4-bit codes / int8 codes + blockwise
-    scales, ``nf4`` vs ``int8`` chosen by the layer's bit — numerically
-    identical to the simulated path (same blocking, same codebooks) but
-    actually holding ≈bits/8 bytes per parameter. Non-eligible leaves
-    stay dense and are accounted dense. ``mem_bytes`` is then the
-    *measured* storage of the returned tree, not a model.
+    ``_PACKABLE``) are emitted as *grouped* :class:`PackedStack`s —
+    contiguous runs of equal-bit layers (the static
+    :func:`~repro.core.mixed_precision.group_schedule`) collapse into
+    ONE bit-homogeneous stacked ``QTensor`` per group (stacked packed
+    4-bit codes / int8 codes + stacked blockwise scales, ``nf4`` vs
+    ``int8`` chosen by the group's bit; 16-bit groups stay plain dense
+    stacks) — numerically identical to the simulated path AND to
+    per-layer quantization (blockwise absmax scaling is independent per
+    leading index), but actually holding ≈bits/8 bytes per parameter
+    and ``lax.scan``-sliceable per group (see ``models/transformer``'s
+    ``packed_exec="scan"`` path). Non-eligible leaves stay dense and
+    are accounted dense. ``mem_bytes`` is then the *measured* storage
+    of the returned tree, not a model.
 
     Returns (qparams, adapters, mem_bytes).
     """
+    from repro.core.mixed_precision import group_schedule
+
+    bits_arr = np.asarray(bits_per_layer)
+    if bits_arr.shape != (cfg.n_layers,):
+        raise ValueError(
+            f"bits_per_layer has {bits_arr.size} entries for a "
+            f"{cfg.n_layers}-layer model (must match exactly; short vectors "
+            f"used to wrap around and mis-assign bits)"
+        )
     flat = flatten_params(params)
     qflat, aflat = {}, {}
     key = jax.random.PRNGKey(qcfg.seed)
@@ -209,7 +231,6 @@ def quantize_blocks(
             mem += w.size * w.dtype.itemsize
             continue
         n_stacked = w.shape[0] if w.ndim >= 3 else 1
-        bits_arr = np.asarray(bits_per_layer)
         lids = np.clip(_leaf_layer_ids(cfg, path, n_stacked), 0, len(bits_arr) - 1)
         bits_vec = bits_arr[lids]
         if w.ndim == 2:
@@ -253,18 +274,23 @@ def quantize_blocks(
             aflat[path] = ad
 
         if packable:
-            items = []
-            for l in range(n_stacked):
-                b_l = int(bits_vec[l])
-                if b_l >= 16:
-                    items.append(q_src[l].astype(flat[path].dtype))
+            # one homogeneous stacked entry per bit-group: quantizing the
+            # [g, in, out] slice is bit-identical to quantizing its layers
+            # one by one (blockwise scaling is per leading index), so the
+            # grouped stack dequantizes exactly like the old per-layer one
+            sched = group_schedule(bits_vec)
+            groups = []
+            for b_g, start, length in sched:
+                blk = q_src[start : start + length]
+                if b_g >= 16:
+                    groups.append(blk.astype(flat[path].dtype))
                 else:
                     qc = QuantConfig(
-                        qcfg.codebook8 if b_l >= 8 else qcfg.codebook4,
+                        qcfg.codebook8 if b_g >= 8 else qcfg.codebook4,
                         qcfg.quant_block, qcfg.double_quant,
                     )
-                    items.append(qtensor_from_dense(q_src[l], qc))
-            stack = PackedStack(items)
+                    groups.append(qtensor_from_dense(blk, qc))
+            stack = PackedStack(groups, sched)
             qflat[path] = stack
             mem += stack.nbytes()
             continue

@@ -43,6 +43,8 @@ __all__ = [
     "unpack_codes",
     "qtensor_from_dense",
     "qtensor_to_dense",
+    "qtensor_layer_slice",
+    "qtensor_leading_slice",
     "qtensor_matmul",
     "quant_bytes",
     "dense_bytes",
@@ -392,48 +394,173 @@ class QTensor:
         return double_dequantize_scales(self.scales, self.dq_scale, self.dq_offset)
 
 
+def qtensor_layer_slice(qt: QTensor, i: int) -> QTensor:
+    """Layer ``i`` of a stacked (``[L, in, out]``-logical) QTensor."""
+    if qt.ndim < 3:
+        raise ValueError(f"need a stacked QTensor, got shape {qt.shape}")
+    return QTensor(
+        qt.codes[i],
+        qt.scales[i],
+        None if qt.dq_scale is None else qt.dq_scale[i],
+        None if qt.dq_offset is None else qt.dq_offset[i],
+        qt.shape[1:],
+        qt.cfg,
+    )
+
+
+def qtensor_leading_slice(qt: QTensor, start: int, length: int) -> QTensor:
+    """Leading-axis slice ``[start:start+length]`` of a stacked QTensor.
+
+    Static (trace-time) slicing: the result is itself a stacked QTensor
+    whose leaves all carry leading dim ``length`` — exactly what
+    ``lax.scan`` needs to slice one layer per iteration.
+    """
+    if qt.ndim < 3:
+        raise ValueError(f"need a stacked QTensor, got shape {qt.shape}")
+    sl = slice(start, start + length)
+    return QTensor(
+        qt.codes[sl],
+        qt.scales[sl],
+        None if qt.dq_scale is None else qt.dq_scale[sl],
+        None if qt.dq_offset is None else qt.dq_offset[sl],
+        (length,) + qt.shape[1:],
+        qt.cfg,
+    )
+
+
 @jax.tree_util.register_pytree_node_class
 class PackedStack:
-    """Per-layer weight stack for *executed* mixed precision.
+    """Grouped per-layer weight stack for *executed* mixed precision.
 
     A stacked ``[L, in, out]`` leaf whose layers carry different bit
     widths cannot stay one homogeneous array (4-bit and 8-bit layers
-    have different storage shapes), so the packed serving path stores it
-    as a tuple of per-layer entries — each a :class:`QTensor` (nf4 /
-    int8 at that layer's bit width) or a dense array for 16-bit layers.
-    The model's packed forward indexes it per period instead of
-    ``lax.scan``-slicing; as a pytree it flows through jit unchanged.
+    have different storage shapes). Instead of one entry per layer, the
+    stack holds one entry per *bit-homogeneous group*: contiguous runs
+    of equal-bit layers (the static ``schedule`` of
+    ``(bit, start, length)`` triples, see
+    :func:`repro.core.mixed_precision.group_schedule`) collapse into ONE
+    stacked :class:`QTensor` — stacked packed codes ``[g, in, out·bits/8]``
+    + stacked blockwise scales ``[g, nb]`` — while 16-bit groups stay
+    plain dense ``[g, in, out]`` arrays. Each group is therefore
+    ``lax.scan``-sliceable along its leading axis, so the packed
+    execution path runs one scan per group and HLO/trace cost grows with
+    the number of groups (≤3 for banded allocations) instead of the
+    number of layers. ``packed_exec="unroll"`` still indexes per layer
+    through :meth:`__getitem__` as the parity oracle.
     """
 
-    def __init__(self, items):
-        self.items = tuple(items)
+    def __init__(self, groups, schedule):
+        self.groups = tuple(groups)
+        schedule = tuple((int(b), int(s), int(n)) for b, s, n in schedule)
+        if len(self.groups) != len(schedule):
+            raise ValueError(
+                f"{len(self.groups)} groups vs {len(schedule)} schedule entries"
+            )
+        pos = 0
+        for entry, (b, s, n) in zip(self.groups, schedule):
+            if s != pos or n < 1:
+                raise ValueError(f"non-contiguous schedule {schedule}")
+            if hasattr(entry, "shape") and entry.shape and entry.shape[0] != n:
+                raise ValueError(
+                    f"group at layer {s} stacks {entry.shape[0]} layers, "
+                    f"schedule says {n}"
+                )
+            pos += n
+        self.schedule = schedule
+
+    @classmethod
+    def from_layers(cls, items):
+        """Build from per-layer entries (QTensor per quantized layer,
+        dense array per 16-bit layer), grouping adjacent layers of equal
+        bit width / quant config into stacked groups."""
+        items = list(items)
+        keys = [
+            (it.bits, it.cfg) if isinstance(it, QTensor) else (16, None)
+            for it in items
+        ]
+        groups, schedule, start = [], [], 0
+        for i in range(1, len(items) + 1):
+            if i < len(items) and keys[i] == keys[start]:
+                continue
+            run = items[start:i]
+            bit = keys[start][0]
+            if isinstance(run[0], QTensor):
+                qt = run[0]
+                stack = lambda attr: jnp.stack([getattr(r, attr) for r in run])
+                groups.append(
+                    QTensor(
+                        stack("codes"),
+                        stack("scales"),
+                        None if qt.dq_scale is None else stack("dq_scale"),
+                        None if qt.dq_offset is None else stack("dq_offset"),
+                        (len(run),) + qt.shape,
+                        qt.cfg,
+                    )
+                )
+            else:
+                groups.append(jnp.stack(run))
+            schedule.append((bit, start, i - start))
+            start = i
+        return cls(groups, schedule)
 
     def __len__(self) -> int:
-        return len(self.items)
+        return int(sum(n for _, _, n in self.schedule))
 
     def __getitem__(self, i):
-        return self.items[i]
+        """Per-layer entry (a 2-D QTensor or dense matrix) — the unroll
+        oracle's access path."""
+        for g, (bit, start, length) in zip(self.groups, self.schedule):
+            if start <= i < start + length:
+                if isinstance(g, QTensor):
+                    return qtensor_layer_slice(g, i - start)
+                return g[i - start]
+        raise IndexError(i)
+
+    def slice_layers(self, start: int, length: int):
+        """Homogeneous stacked entry covering layers [start, start+length).
+
+        The range must lie within ONE group (callers slice along a
+        schedule that refines this stack's — see
+        ``transformer._packed_runs``); returns the group's stacked
+        QTensor / dense array restricted to the range, scan-ready.
+        """
+        for g, (bit, gs, gl) in zip(self.groups, self.schedule):
+            if gs <= start and start + length <= gs + gl:
+                if gs == start and gl == length:
+                    return g
+                if isinstance(g, QTensor):
+                    return qtensor_leading_slice(g, start - gs, length)
+                return g[start - gs : start - gs + length]
+        raise ValueError(
+            f"layers [{start}, {start + length}) straddle group boundaries "
+            f"of schedule {self.schedule}"
+        )
 
     def __repr__(self) -> str:
         kinds = ",".join(
-            f"q{it.bits}" if isinstance(it, QTensor) else "dense" for it in self.items
+            f"q{b}x{n}" if isinstance(g, QTensor) else f"dense x{n}"
+            for g, (b, _, n) in zip(self.groups, self.schedule)
         )
         return f"PackedStack[{kinds}]"
 
     def nbytes(self) -> int:
         return int(
             sum(
-                it.nbytes() if isinstance(it, QTensor) else it.size * it.dtype.itemsize
-                for it in self.items
+                g.nbytes() if isinstance(g, QTensor) else g.size * g.dtype.itemsize
+                for g in self.groups
             )
         )
 
     def tree_flatten(self):
-        return self.items, len(self.items)
+        return self.groups, self.schedule
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children)
+        # no validation: jax may unflatten with abstract placeholders
+        obj = object.__new__(cls)
+        obj.groups = tuple(children)
+        obj.schedule = aux
+        return obj
 
 
 def measured_weight_bytes(tree) -> int:

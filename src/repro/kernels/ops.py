@@ -44,24 +44,34 @@ def _aligned(M, K, N, bm=256, bk=256, bn=256):
 
 def _rowwise_layout(qt: QTensor) -> bool:
     """True when qt's flat block scales reshape to the kernels' [K, N/block]."""
-    K, N = qt.shape
-    return N % qt.cfg.block == 0
+    return qt.shape[-1] % qt.cfg.block == 0
 
 
 def qmatmul(x: jnp.ndarray, qt: QTensor) -> jnp.ndarray:
     """x [..., K] @ deq(qt) [K, N] via the fused kernel (oracle fallback).
 
     The kernels pad ragged M/K/N up to the tile grid internally, so the
-    fused path covers pruned (non-128-multiple) channel counts too. The
-    jnp oracle only remains for layouts the kernels cannot express:
-    stacked (>2-D) tensors, sub-byte codebooks other than 4-bit, and
-    scale blocks that straddle weight rows (N % block != 0).
+    fused path covers pruned (non-128-multiple) channel counts too.
+
+    Stacked-leading-axis variant: a ``lax.scan`` over a bit-homogeneous
+    stacked QTensor (logical ``[g, K, N]``) hands the body a slice whose
+    live code/scale arrays are per-layer 2-D while the static ``shape``
+    metadata still reads ``(g, K, N)`` — so the matrix dims come from
+    ``shape[-2:]`` and kernel eligibility from the LIVE ``codes.ndim``.
+    This is how the packed scan path dispatches ONE fused kernel per
+    scan step. The jnp oracle only remains for layouts the kernels
+    cannot express: sub-byte codebooks other than 4-bit and scale
+    blocks that straddle weight rows (N % block != 0). Codes that are
+    genuinely 3-D (no scan slice) also take the oracle, with BATCHED
+    matmul semantics — ``x @ deq(qt) [g, K, N]`` broadcasts over the
+    stack (the simulated-training layout), it does NOT return a
+    per-layer 2-D result.
     """
-    if qt.ndim != 2:
+    if qt.codes.ndim != 2:
         from repro.core.quantization import qtensor_to_dense
 
         return x @ qtensor_to_dense(qt, out_dtype=x.dtype)
-    K, N = qt.shape
+    K, N = qt.shape[-2], qt.shape[-1]
     x2, lead = _flatten_x(x)
     scales = qt.resolved_scales().reshape(K, -1) if _rowwise_layout(qt) else None
     if qt.bits == 4 and scales is not None:
@@ -101,14 +111,23 @@ def paged_decode_attention(q, k_pool, v_pool, tables, ctx_len,
 
 
 def lora_matmul(x, qt: QTensor, a, b, lora_scale: float = 2.0) -> jnp.ndarray:
-    """Fused base+adapter matmul; falls back to qmatmul + dense lora."""
-    K, N = qt.shape
+    """Fused base+adapter matmul; falls back to qmatmul + dense lora.
+
+    Accepts scan-sliced stacked QTensors like :func:`qmatmul` (matrix
+    dims from ``shape[-2:]``, kernel eligibility from the live 2-D
+    ``codes``)."""
+    K, N = qt.shape[-2], qt.shape[-1]
     x2, lead = _flatten_x(x)
     M = x2.shape[0]
-    scales = qt.resolved_scales().reshape(K, -1)
-    if qt.bits == 4 and _aligned(M, K, N) and a.shape[1] <= 128:
+    if (
+        qt.codes.ndim == 2
+        and qt.bits == 4
+        and _rowwise_layout(qt)
+        and _aligned(M, K, N)
+        and a.shape[1] <= 128
+    ):
         y = lora_qmatmul(
-            x2, qt.codes, scales, a, b,
+            x2, qt.codes, qt.resolved_scales().reshape(K, -1), a, b,
             codebook=_book_tuple(qt.cfg.codebook),
             block=qt.cfg.block, lora_scale=lora_scale, interpret=_INTERPRET,
         )

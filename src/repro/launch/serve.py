@@ -13,7 +13,12 @@ quantize-dequantize path (fine-tune parity / debugging).
 ``--bits-artifact out.json`` loads a mixed-precision allocation produced
 by ``launch.bo_search`` / ``examples/bo_search.py --out`` (a JSON object
 with a per-layer ``"bits"`` list) and serves it packed — QPruner³'s
-search result actually changing the runtime footprint.
+search result actually changing the runtime footprint. The run reports
+the allocation's scan-group schedule ``groups: [(4, 0, 10), (8, 10, 2),
+...]`` — with ``--packed-exec scan`` (default) each bit-homogeneous
+group compiles to ONE ``lax.scan`` body, so HLO size and trace time
+grow with the group count instead of the depth; ``--packed-exec
+unroll`` keeps the per-layer loop (the bit-exact parity oracle).
 
 ``--paged`` serves a MIXED-length request set through the paged-KV
 continuous-batching engine (``serve.scheduler.PagedEngine``): prompts of
@@ -88,6 +93,11 @@ def main():
     ap.add_argument("--simulated", action="store_true",
                     help="simulate quantization (dense storage) instead of "
                          "serving packed QTensors")
+    ap.add_argument("--packed-exec", choices=("scan", "unroll"), default="scan",
+                    help="packed mixed-precision execution: 'scan' runs one "
+                         "lax.scan per bit-homogeneous layer group (HLO/trace "
+                         "cost grows with groups, not depth); 'unroll' is the "
+                         "per-layer parity oracle")
     ap.add_argument("--paged", action="store_true",
                     help="serve mixed-length requests through the paged-KV "
                          "continuous-batching engine")
@@ -103,6 +113,7 @@ def main():
     cfg = zoo.get_smoke_config(args.arch) if args.smoke else zoo.get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("use examples/whisper-style driver for enc-dec serving")
+    cfg = cfg.with_(packed_exec=args.packed_exec)
     bits = None
     if args.bits_artifact:
         bits = _load_bits(args.bits_artifact)
@@ -132,12 +143,27 @@ def main():
             print(f"  modeled artifact size {mem/1e6:.2f} MB "
                   f"(runtime holds dense {dense_bytes/1e6:.2f} MB)")
         else:
+            from repro.core.mixed_precision import group_schedule
+
             measured = measured_weight_bytes(params)
             modeled = memory_model_of(cfg, qcfg).weight_bytes(bits)
             print(f"  measured weight bytes {measured/1e6:.2f} MB "
                   f"(dense {dense_bytes/1e6:.2f} MB, "
                   f"{dense_bytes/measured:.2f}x smaller; "
                   f"MemoryModel says {modeled/1e6:.2f} MB)")
+            # scan-group schedule: packed_exec="scan" compiles one scan
+            # body per (bit, start, length) group instead of one block
+            # per layer — fewer groups = smaller HLO / faster trace.
+            # ``executed`` is the per-segment merged run schedule the
+            # model actually scans (the common refinement across packed
+            # leaves), read back from the packed tree itself.
+            sched = group_schedule(bits)
+            executed = zoo.packed_group_schedule(cfg, params)
+            print(f"  groups: {[tuple(g) for g in sched]} "
+                  f"({len(sched)} scan group{'s' if len(sched) != 1 else ''} "
+                  f"over {len(bits)} layers, packed_exec={args.packed_exec})")
+            print(f"  executed runs: "
+                  f"{ {k: [tuple(r) for r in v] for k, v in executed.items()} }")
 
     ctx = args.prompt_len + args.new_tokens
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,

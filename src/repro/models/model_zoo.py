@@ -53,6 +53,7 @@ __all__ = [
     "paged_step_fn",
     "paged_insert_fn",
     "paged_logical_len",
+    "packed_group_schedule",
     "input_specs",
     "prune_specs",
     "cell_supported",
@@ -229,6 +230,18 @@ def paged_insert_fn(cfg: ArchConfig):
 
 def paged_logical_len(cfg: ArchConfig, ctx_len: int) -> int:
     return _tf.paged_logical_len(cfg, ctx_len)
+
+
+def packed_group_schedule(cfg: ArchConfig, params) -> dict[str, tuple]:
+    """Per-segment (start, length) scan-run schedule of a packed tree.
+
+    What ``cfg.packed_exec == "scan"`` executes: one ``lax.scan`` per
+    run per segment, so ``sum(len(v) for v in result.values())`` is the
+    number of compiled scan bodies (the HLO-size driver). Empty for
+    trees without PackedStack leaves."""
+    if cfg.family == "encdec":
+        return {}
+    return _tf.packed_run_schedule(cfg, params)
 
 
 def cache_axes(cfg: ArchConfig):

@@ -4,6 +4,13 @@ h_t = a_t ⊙ h_{t-1} + b_t  — associative, so each chunk runs a log-depth
 ``lax.associative_scan`` (sequence-parallel on TPU) while an outer
 ``lax.scan`` over chunks bounds live memory to O(chunk) and keeps the
 HLO O(1) in sequence length.
+
+(The same keep-HLO-off-the-loop-axis principle governs the DEPTH axis:
+homogeneous layer stacks scan in ``models/transformer._segment_scan``,
+and packed mixed-precision stacks scan per bit-homogeneous group —
+``transformer._packed_group_scan`` / ``_packed_cached_scan`` over the
+grouped ``PackedStack`` schedule — so module size stays O(groups), not
+O(layers), exactly as this file keeps it O(1) in sequence length.)
 """
 from __future__ import annotations
 

@@ -63,6 +63,7 @@ __all__ = [
     "paged_insert_prefill",
     "paged_logical_len",
     "has_packed_params",
+    "packed_run_schedule",
 ]
 
 
@@ -131,6 +132,11 @@ class ArchConfig:
     # attn_bf16_dots / int8-KV round some dots to bf16 on the gather
     # path only, so low-order logit bits can differ between impls there.
     paged_attn_impl: str = "kernel"
+    # packed (PackedStack) mixed-precision execution: "scan" runs one
+    # lax.scan per bit-homogeneous layer group (HLO/trace cost grows
+    # with the number of groups, not depth); "unroll" keeps the original
+    # per-layer Python loop as the bit-exact parity oracle.
+    packed_exec: str = "scan"
 
     @property
     def hd(self) -> int:
@@ -159,12 +165,19 @@ def segments_of(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
 # ---------------------------------------------------------------------------
 # Packed mixed-precision stacks
 #
-# The serving path may hold quantizable weights as PackedStacks — one
-# QTensor (or dense array for 16-bit layers) per period, possibly at
-# different bit widths. Those are not lax.scan-sliceable, so segments
-# containing them run as an unrolled Python loop with per-period
-# slicing; every block `apply`/`decode` fn already accepts QTensor
-# leaves via layers.mm, so only the iteration strategy changes.
+# The serving path may hold quantizable weights as PackedStacks —
+# bit-homogeneous GROUPS of stacked QTensors (contiguous runs of
+# equal-bit periods share one stacked codes/scales entry; 16-bit groups
+# stay plain dense stacks) with a static (bit, start, length) schedule.
+# With ``cfg.packed_exec == "scan"`` (default) each segment runs one
+# ``lax.scan`` per group run: the scan body slices a per-period QTensor
+# out of the stacked group and dispatches ONE fused kernels/ops.qmatmul
+# per matmul, so HLO/trace cost grows with the number of groups (≤3 for
+# banded bit allocations) instead of the depth. KV caches, adapters,
+# and paged block pools are sliced by the same group schedule.
+# ``cfg.packed_exec == "unroll"`` keeps the original per-period Python
+# loop as the bit-exact parity oracle; every block `apply`/`decode` fn
+# accepts QTensor leaves via layers.mm, so only iteration changes.
 # ---------------------------------------------------------------------------
 
 
@@ -222,6 +235,125 @@ def _packed_cached_loop(cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, entry: str):
             new_c[key] = nc
         per_period.append(new_c)
     return x, jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+
+
+def _packed_runs(seg_params) -> tuple[tuple[int, int], ...]:
+    """Merged (start, length) scan-runs over a segment's period axis.
+
+    The common refinement of every PackedStack leaf's group schedule:
+    within one run EVERY leaf is bit-homogeneous (each leaf's groups are
+    contiguous, so merging all boundaries refines all of them), which is
+    what lets one ``lax.scan`` slice every leaf per period. With one
+    quantizable leaf family per block the runs equal the per-leaf
+    schedule; pattern segments whose positions carry different bit
+    vectors get the refined (shorter-run) schedule.
+    """
+    from repro.core.quantization import PackedStack
+
+    n = _stack_len(seg_params)
+    cuts = {0, n}
+    for leaf in jax.tree.leaves(
+        seg_params, is_leaf=lambda x: isinstance(x, PackedStack)
+    ):
+        if isinstance(leaf, PackedStack):
+            if len(leaf) != n:
+                raise ValueError(
+                    f"PackedStack of {len(leaf)} layers in a {n}-period segment"
+                )
+            for _, start, length in leaf.schedule:
+                cuts.add(start)
+                cuts.add(start + length)
+    edges = sorted(cuts)
+    return tuple((a, b - a) for a, b in zip(edges, edges[1:]))
+
+
+def packed_run_schedule(cfg: ArchConfig, params) -> dict[str, tuple]:
+    """{segment name: ((start, length), ...)} scan-run schedule of a
+    packed parameter tree — what ``packed_exec="scan"`` executes (one
+    ``lax.scan`` per run per segment). Segments without packed leaves
+    are omitted (they scan whole)."""
+    out = {}
+    for si, _ in enumerate(segments_of(cfg)):
+        seg = params[f"seg{si}"]
+        if has_packed_params(seg):
+            out[f"seg{si}"] = _packed_runs(seg)
+    return out
+
+
+def _slice_run(tree, start: int, length: int):
+    """Restrict a stacked segment subtree to periods [start, start+length).
+
+    PackedStack leaves yield their bit-homogeneous stacked entry
+    (scan-sliceable QTensor / dense stack); plain stacked leaves (norms,
+    biases, caches, adapters, block pools) take a leading-axis slice.
+    """
+    from repro.core.quantization import PackedStack
+
+    def f(a):
+        if isinstance(a, PackedStack):
+            return a.slice_layers(start, length)
+        return a[start : start + length]
+
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, PackedStack))
+
+
+def _packed_exec_mode(cfg: ArchConfig) -> str:
+    if cfg.packed_exec not in ("scan", "unroll"):
+        raise ValueError(
+            f"packed_exec must be 'scan' or 'unroll', got {cfg.packed_exec!r}"
+        )
+    return cfg.packed_exec
+
+
+def _packed_cached_scan(cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, entry: str):
+    """Per-group ``lax.scan`` over a packed segment WITH caches.
+
+    The scan-mode twin of :func:`_packed_cached_loop` (same ``entry``
+    contract): one scan per bit-homogeneous run, whose body slices a
+    per-period QTensor out of the stacked group and dispatches the fused
+    kernels once per matmul. Caches / adapters / paged block pools are
+    sliced by the same run schedule, and the per-run stacked cache
+    outputs concatenate back to the full [n, ...] layout — bit-exact vs
+    the unrolled oracle (identical operands, identical op order).
+    """
+
+    def body(carry, xs):
+        x = carry
+        if seg_ad is not None:
+            p_sl, c_sl, ad_sl = xs
+        else:
+            p_sl, c_sl = xs
+            ad_sl = None
+        new_c = {}
+        for pi, kind in enumerate(pattern):
+            key = f"p{pi}_{kind}"
+            out = _KIND[kind][entry](cfg, p_sl[key], x, c_sl[key], ctx, sub(ad_sl, key))
+            x, nc = (out[0], out[2]) if entry == "prefill" else out
+            x = constrain(x, "batch", "seq_act", None)
+            new_c[key] = nc
+        return x, new_c
+
+    parts = []
+    for start, length in _packed_runs(seg_p):
+        p_run = _slice_run(seg_p, start, length)
+        c_run = _slice_run(seg_c, start, length)
+        ad_run = _slice_run(seg_ad, start, length) if seg_ad is not None else None
+        xs = (p_run, c_run, ad_run) if seg_ad is not None else (p_run, c_run)
+        x, nc = jax.lax.scan(body, x, xs)
+        parts.append(nc)
+    if len(parts) == 1:
+        return x, parts[0]
+    return x, jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+def _packed_cached(cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, entry: str):
+    """Dispatch a packed cached segment on ``cfg.packed_exec``."""
+    fn = (
+        _packed_cached_loop
+        if _packed_exec_mode(cfg) == "unroll"
+        else _packed_cached_scan
+    )
+    return fn(cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, entry)
 
 
 # ---------------------------------------------------------------------------
@@ -811,12 +943,9 @@ def _embed(cfg, params, tokens, patches=None, positions=None):
 
 
 def _segment_loop(cfg, seg_params, pattern, x, ctx, seg_ad=None):
-    """Unrolled per-period forward for packed (mixed-precision) stacks.
-
-    PackedStack leaves hold per-layer QTensors at possibly different bit
-    widths — not scan-sliceable — so the packed serving path trades the
-    O(1)-in-depth HLO of ``lax.scan`` for per-layer kernel dispatch.
-    """
+    """Unrolled per-period forward for packed (mixed-precision) stacks —
+    the ``packed_exec="unroll"`` parity oracle (per-layer kernel
+    dispatch, HLO linear in depth)."""
     aux = jnp.zeros((), jnp.float32)
     for period in range(_stack_len(seg_params)):
         p_sl = _slice_stack(seg_params, period)
@@ -829,10 +958,47 @@ def _segment_loop(cfg, seg_params, pattern, x, ctx, seg_ad=None):
     return x, aux
 
 
+def _packed_group_scan(cfg, seg_params, pattern, x, ctx, seg_ad=None):
+    """Forward over a packed segment as one ``lax.scan`` per bit-group.
+
+    Bit-homogeneous runs (``_packed_runs``) slice every PackedStack leaf
+    to a stacked QTensor the scan can slice per period; the body is the
+    ordinary segment body (``kernels/ops.qmatmul`` fires once per matmul
+    on the sliced QTensor), so HLO holds one scan body per group instead
+    of one block per layer. Bit-exact vs :func:`_segment_loop`.
+    """
+
+    def body(carry, xs):
+        x, aux = carry
+        p_sl = xs[0] if seg_ad is not None else xs
+        ad_sl = xs[1] if seg_ad is not None else None
+        for pi, kind in enumerate(pattern):
+            key = f"p{pi}_{kind}"
+            x, a = _KIND[kind]["apply"](cfg, p_sl[key], x, ctx, sub(ad_sl, key))
+            x = constrain(x, "batch", "seq_act", None)
+            aux = aux + a
+        return (x, aux), None
+
+    body_fn = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat
+        else body
+    )
+    aux = jnp.zeros((), jnp.float32)
+    for start, length in _packed_runs(seg_params):
+        p_run = _slice_run(seg_params, start, length)
+        ad_run = _slice_run(seg_ad, start, length) if seg_ad is not None else None
+        xs = (p_run, ad_run) if seg_ad is not None else p_run
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), xs)
+    return x, aux
+
+
 def _segment_scan(cfg, seg_params, pattern, x, ctx, seg_ad=None):
     """Scan one segment's stacked pattern over its periods → (x, aux)."""
     if has_packed_params(seg_params):
-        return _segment_loop(cfg, seg_params, pattern, x, ctx, seg_ad)
+        if _packed_exec_mode(cfg) == "unroll":
+            return _segment_loop(cfg, seg_params, pattern, x, ctx, seg_ad)
+        return _packed_group_scan(cfg, seg_params, pattern, x, ctx, seg_ad)
 
     def body(carry, xs):
         x, aux = carry
@@ -1084,8 +1250,9 @@ def decode_step(
         seg_ad = sub(adapters, f"seg{si}") if adapters is not None else None
 
         if has_packed_params(seg_p):
-            # packed mixed precision: unrolled loop, per-layer kernels
-            x, new_caches[f"seg{si}"] = _packed_cached_loop(
+            # packed mixed precision: per-bit-group scan (or the
+            # unrolled per-layer oracle under packed_exec="unroll")
+            x, new_caches[f"seg{si}"] = _packed_cached(
                 cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, "decode"
             )
             continue
@@ -1178,7 +1345,7 @@ def prefill_with_caches(
         seg_ad = sub(adapters, f"seg{si}") if adapters is not None else None
 
         if has_packed_params(seg_p):
-            x, new_caches[f"seg{si}"] = _packed_cached_loop(
+            x, new_caches[f"seg{si}"] = _packed_cached(
                 cfg, seg_p, seg_c, seg_ad, pattern, x, ctx, "prefill"
             )
             continue

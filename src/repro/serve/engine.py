@@ -26,9 +26,11 @@ sampled tokens are bit-identical whether it runs alone, padded, or in
 any batch mix (``tests/test_packed_serving.py`` asserts this).
 
 Params may be dense, simulated-quantized (dense storage), or *packed*
-mixed precision — PackedStack/QTensor leaves from
+mixed precision — grouped PackedStack/QTensor leaves from
 ``core.qpruner.quantize_blocks(pack=True)`` — in which case every base
-matmul dispatches to the fused Pallas dequant kernels.
+matmul dispatches to the fused Pallas dequant kernels, executed as one
+``lax.scan`` per bit-homogeneous layer group (``cfg.packed_exec``,
+HLO bound by the group count rather than the depth).
 
 For admitting/retiring requests *between* decode steps against a paged
 KV cache, see ``serve.scheduler.PagedEngine``.

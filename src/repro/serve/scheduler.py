@@ -43,6 +43,14 @@ preemption-by-recompute (``tests/test_sampling`` is the property test).
 Requests retire the moment their per-request budget is spent OR a stop
 token fires — blocks are released immediately, not at the batch drain.
 
+Packed mixed-precision params (grouped PackedStacks from
+``quantize_blocks(pack=True)``) ride the same ONE compiled step: the
+per-layer block pools slice along the bit-group schedule and each group
+runs as one ``lax.scan`` (``cfg.packed_exec="scan"``), so the step's
+HLO stays bounded by the group count and ``decode_traces`` stays 1 —
+token-exact vs the unrolled oracle and the sequential engine
+(``tests/test_packed_serving.py``).
+
 If the pool runs dry while a request grows, the youngest active request
 is preempted by *recompute* (vLLM-style): its blocks are freed and it is
 requeued with ``prompt + emitted`` as the new prompt, which re-prefills

@@ -1,10 +1,13 @@
 """Packed mixed-precision serving: QTensor params end-to-end.
 
 Covers the executed quantization path: ``quantize_blocks(pack=True)``
-emitting per-layer QTensors, the packed forward/decode/prefill through
-the fused Pallas kernels (interpret mode), measured-vs-modeled byte
-accounting, and the kernels' pad-to-tile handling of pruned (ragged)
-channel counts.
+emitting grouped PackedStacks (one bit-homogeneous stacked QTensor per
+contiguous equal-bit layer run), the packed forward/decode/prefill
+through the fused Pallas kernels (interpret mode) — both the per-group
+``lax.scan`` path (``packed_exec="scan"``, default) and the unrolled
+per-layer oracle, asserted bit-exact against each other — plus
+measured-vs-modeled byte accounting and the kernels' pad-to-tile
+handling of pruned (ragged) channel counts.
 """
 import jax
 import jax.numpy as jnp
@@ -252,7 +255,8 @@ def test_packed_stack_jit_roundtrip():
         QuantConfig("nf4", 64),
     )
     w16 = jnp.asarray(RNG.normal(size=(64, 128)).astype(np.float32))
-    stack = PackedStack([w4, w16])
+    stack = PackedStack.from_layers([w4, w16])
+    assert stack.schedule == ((4, 0, 1), (16, 1, 1))
     x = jnp.asarray(RNG.normal(size=(2, 64)).astype(np.float32))
 
     @jax.jit
@@ -266,4 +270,234 @@ def test_packed_stack_jit_roundtrip():
     leaves, treedef = jax.tree.flatten(stack)
     stack2 = jax.tree.unflatten(treedef, leaves)
     assert isinstance(stack2, PackedStack) and len(stack2) == 2
+    assert stack2.schedule == stack.schedule
     assert stack2.nbytes() == stack.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Bit-homogeneous scan groups: scan == unroll, grouped stacks, schedules
+# ---------------------------------------------------------------------------
+# (local np.random.default_rng everywhere below: the module RNG stream
+# above is order-coupled to tolerance-tuned tests)
+
+from repro.core.mixed_precision import group_schedule
+from repro.core.qpruner import _fake_quant_mixed
+
+
+def test_group_schedule_runs():
+    gs = group_schedule(np.asarray([4, 4, 8, 8, 8, 4]))
+    assert gs == ((4, 0, 2), (8, 2, 3), (4, 5, 1))
+    assert group_schedule(np.full(7, 4)) == ((4, 0, 7),)
+    assert group_schedule(np.asarray([8, 4, 8, 4])) == (
+        (8, 0, 1), (4, 1, 1), (8, 2, 1), (4, 3, 1)
+    )
+    assert group_schedule(np.asarray([], dtype=np.int64)) == ()
+
+
+def test_packed_stack_is_grouped():
+    """quantize_blocks emits ONE stacked QTensor per equal-bit run."""
+    cfg, params = _smoke()
+    bits = np.asarray([4, 4, 8, 16])
+    packed, _, _ = quantize_blocks(
+        cfg, params, bits, QPrunerConfig(), init_adapters=False, pack=True
+    )
+    stack = packed["seg0"]["p0_attn"]["wq"]
+    assert stack.schedule == ((4, 0, 2), (8, 2, 1), (16, 3, 1))
+    assert len(stack.groups) == 3 and len(stack) == cfg.n_layers
+    g4 = stack.groups[0]
+    assert isinstance(g4, QTensor) and g4.shape[0] == 2  # stacked codes+scales
+    assert not isinstance(stack.groups[2], QTensor)  # dense 16-bit group
+    for l in range(cfg.n_layers):  # per-layer view for the unroll oracle
+        if bits[l] >= 16:
+            assert not isinstance(stack[l], QTensor)
+        else:
+            assert stack[l].bits == bits[l]
+    # grouped quantization must be bit-identical to quantizing the layer
+    # alone (blockwise scaling is independent per leading index)
+    w1 = params["seg0"]["p0_attn"]["wq"][1].astype(jnp.float32)
+    solo = qtensor_from_dense(w1, stack[1].cfg)
+    np.testing.assert_array_equal(
+        np.asarray(qtensor_to_dense(stack[1], out_dtype=jnp.float32)),
+        np.asarray(qtensor_to_dense(solo, out_dtype=jnp.float32)),
+    )
+    np.testing.assert_array_equal(np.asarray(stack[1].codes),
+                                  np.asarray(solo.codes))
+    with pytest.raises(ValueError):
+        stack.slice_layers(1, 2)  # straddles the 4-bit/8-bit boundary
+
+
+def test_packed_group_schedule_reports_executed_runs():
+    """model_zoo.packed_group_schedule reads the merged per-segment run
+    schedule back out of the packed tree — boundaries must match the bit
+    vector's group_schedule; dense trees report nothing."""
+    cfg, params = _smoke()
+    bits = np.asarray([4, 4, 8, 16])
+    packed, _, _ = quantize_blocks(
+        cfg, params, bits, QPrunerConfig(), init_adapters=False, pack=True
+    )
+    runs = zoo.packed_group_schedule(cfg, packed)
+    assert runs == {"seg0": ((0, 2), (2, 1), (3, 1))}
+    assert tuple((s, n) for _, s, n in group_schedule(bits)) == runs["seg0"]
+    assert zoo.packed_group_schedule(cfg, params) == {}
+
+
+def test_quantize_blocks_rejects_wrong_bits_length():
+    cfg, params = _smoke()
+    with pytest.raises(ValueError, match=r"2 entries .* 4-layer"):
+        quantize_blocks(cfg, params, np.asarray([4, 8]), QPrunerConfig(),
+                        init_adapters=False)
+    with pytest.raises(ValueError, match=r"3 entries .* 5 layers"):
+        _fake_quant_mixed(
+            jnp.zeros((5, 8, 8), jnp.float32), np.asarray([4, 8, 4]),
+            QPrunerConfig(quant_block=64),
+        )
+
+
+_BIT_VECTORS = {
+    "all4": [4, 4, 4, 4],
+    "all8": [8, 8, 8, 8],
+    "alternating": [8, 4, 8, 4],
+    "banded_dense_tail": [4, 4, 8, 16],
+}
+
+
+@pytest.mark.parametrize(
+    "bits_name,adapters",
+    # adapters ride ONE bit vector (the worst case, single-layer groups):
+    # the LoRA path is independent of the grouping, and each instance
+    # jit-compiles 6 programs — keep the matrix lean for CI wall-clock
+    [(n, False) for n in sorted(_BIT_VECTORS)] + [("alternating", True)],
+)
+def test_packed_scan_matches_unroll(bits_name, adapters):
+    """scan and unroll packed execution are BIT-exact inside one jitted
+    program: forward hidden states, prefill logits+caches, decode logits
+    +caches — for ragged bit vectors incl. single-layer groups."""
+    cfg, params = _smoke()
+    bits = np.asarray(_BIT_VECTORS[bits_name])
+    packed, ad, _ = quantize_blocks(
+        cfg, params, bits, QPrunerConfig(), init_adapters=adapters, pack=True
+    )
+    if not adapters:
+        assert ad is None
+    cfg_u = cfg.with_(packed_exec="unroll")
+    rng = np.random.default_rng(11)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)), jnp.int32)
+
+    fwd_s = jax.jit(lambda p, t: tf.forward_hidden(cfg, p, t, adapters=ad)[0])
+    fwd_u = jax.jit(lambda p, t: tf.forward_hidden(cfg_u, p, t, adapters=ad)[0])
+    np.testing.assert_array_equal(
+        np.asarray(fwd_s(packed, toks)), np.asarray(fwd_u(packed, toks))
+    )
+
+    c0 = zoo.cache_init(cfg)(cfg, 2, 16)
+    pre_s = jax.jit(
+        lambda p, t, c: zoo.prefill_with_caches_fn(cfg)(p, t, c, adapters=ad)
+    )
+    pre_u = jax.jit(
+        lambda p, t, c: zoo.prefill_with_caches_fn(cfg_u)(p, t, c, adapters=ad)
+    )
+    ls, cs = pre_s(packed, toks, c0)
+    lu, cu = pre_u(packed, toks, c0)
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lu))
+    for a, b in zip(jax.tree.leaves(cs), jax.tree.leaves(cu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    step_s = jax.jit(
+        lambda p, t, c, pos: zoo.serve_step_fn(cfg)(p, t, c, pos, adapters=ad)
+    )
+    step_u = jax.jit(
+        lambda p, t, c, pos: zoo.serve_step_fn(cfg_u)(p, t, c, pos, adapters=ad)
+    )
+    ds, cs2 = step_s(packed, toks[:, :1], cs, jnp.asarray(10, jnp.int32))
+    du, cu2 = step_u(packed, toks[:, :1], cu, jnp.asarray(10, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ds), np.asarray(du))
+    for a, b in zip(jax.tree.leaves(cs2), jax.tree.leaves(cu2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window,kv_dtype", [(6, ""), (0, "int8")])
+def test_packed_scan_matches_unroll_windowed_int8(window, kv_dtype):
+    """Ring-buffer (windowed) and int8-KV decode caches slice by the
+    same group schedule — scan stays bit-exact vs the unroll oracle."""
+    cfg, params = _smoke()
+    cfg = cfg.with_(sliding_window=window, kv_cache_dtype=kv_dtype)
+    bits = np.asarray([8, 4, 8, 4])
+    packed, _, _ = quantize_blocks(
+        cfg, params, bits, QPrunerConfig(), init_adapters=False, pack=True
+    )
+    cfg_u = cfg.with_(packed_exec="unroll")
+    rng = np.random.default_rng(12)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 10)), jnp.int32)
+    c0 = zoo.cache_init(cfg)(cfg, 2, 8)  # shorter than the prompt: ring wrap
+    ls, cs = jax.jit(zoo.prefill_with_caches_fn(cfg))(packed, toks, c0)
+    lu, cu = jax.jit(zoo.prefill_with_caches_fn(cfg_u))(packed, toks, c0)
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lu))
+    for a, b in zip(jax.tree.leaves(cs), jax.tree.leaves(cu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ds, _ = jax.jit(zoo.serve_step_fn(cfg))(packed, toks[:, :1], cs,
+                                            jnp.asarray(10, jnp.int32))
+    du, _ = jax.jit(zoo.serve_step_fn(cfg_u))(packed, toks[:, :1], cu,
+                                              jnp.asarray(10, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ds), np.asarray(du))
+
+
+def test_packed_scan_paged_engine_matches_unroll_and_oracle():
+    """The paged continuous-batching engine over grouped packed params:
+    scan tokens == unroll tokens == the sequential per-request oracle,
+    and the one compiled decode step does not retrace (decode_traces=1)."""
+    from repro.serve.scheduler import PagedEngine, PagedServeConfig
+    from tests.serving_oracle import oracle_generate
+
+    cfg, params = _smoke()
+    bits = np.asarray([8, 4, 8, 4])
+    packed, _, _ = quantize_blocks(
+        cfg, params, bits, QPrunerConfig(), init_adapters=False, pack=True
+    )
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (3, 9, 5)]
+    outs = {}
+    for mode in ("scan", "unroll"):
+        eng = PagedEngine(
+            cfg.with_(packed_exec=mode), packed,
+            PagedServeConfig(ctx_len=32, block_size=4, max_batch=2),
+        )
+        outs[mode] = eng.generate(prompts, 6)
+        assert eng.stats()["decode_traces"] == 1
+    for a, b in zip(outs["scan"], outs["unroll"]):
+        np.testing.assert_array_equal(a, b)
+    want = oracle_generate(cfg, packed, prompts, 6, ctx_len=32)
+    for got, exp in zip(outs["scan"], want):
+        np.testing.assert_array_equal(got, exp)
+
+
+def test_packed_scan_hlo_depth_independent():
+    """HLO of the packed decode step grows with the number of bit groups,
+    not the depth: a 16-layer 3-group model lowers to (almost) the same
+    module size as an 8-layer 3-group one under scan, while the unrolled
+    oracle roughly doubles. Trace-only (no compile) so this stays cheap."""
+    base, _ = _smoke()
+    sizes = {}
+    for depth in (8, 16):
+        cfg = base.with_(n_layers=depth)
+        params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+        bits = np.full(depth, 4)
+        bits[: depth // 4] = 8
+        bits[-(depth // 4):] = 8  # banded: 3 groups at any depth
+        assert len(group_schedule(bits)) == 3
+        packed, _, _ = quantize_blocks(
+            cfg, params, bits, QPrunerConfig(), init_adapters=False, pack=True
+        )
+        caches = zoo.cache_init(cfg)(cfg, 2, 16)
+        toks = jnp.zeros((2, 1), jnp.int32)
+        for mode in ("scan", "unroll"):
+            step = zoo.serve_step_fn(cfg.with_(packed_exec=mode))
+            lowered = jax.jit(step).lower(
+                packed, toks, caches, jnp.asarray(0, jnp.int32)
+            )
+            sizes[(depth, mode)] = len(lowered.as_text())
+    scan_growth = sizes[(16, "scan")] / sizes[(8, "scan")]
+    unroll_growth = sizes[(16, "unroll")] / sizes[(8, "unroll")]
+    assert scan_growth < 1.2, sizes
+    assert unroll_growth > 1.5, sizes
+    assert sizes[(16, "scan")] < sizes[(16, "unroll")], sizes
