@@ -234,6 +234,10 @@ def _bench_sampled(cfg, params, *, batch, prompt_len, new_tokens, reps):
         dt = min(_timed(lambda: eng.generate(prompts, sampling=sp))
                  for _ in range(reps))
         out[f"{mode}_tok_per_s"] = batch * new_tokens / dt
+    # uniform accounting row (Engine.stats mirrors PagedEngine names);
+    # informational — the open-loop latency story lives in load_bench.py
+    out.update({k: eng.stats()[k]
+                for k in ("prefill_calls", "prefill_traces", "decode_steps")})
     return out
 
 

@@ -138,6 +138,48 @@ retires immediately, releasing its KV blocks to the allocator. CLI:
 --sampling-seed 7 [--paged]``. The demo below reproduces one request's
 sampled stream from a mixed paged run with a solo run of the same
 ``(seed, rid)``.
+
+Request-level telemetry (metrics + load harness)
+------------------------------------------------
+Steady-state tok/s hides WHEN a request waited. ``serve.metrics`` logs
+each request's lifecycle host-side (never inside the compiled step —
+tokens are bit-identical with metrics on or off):
+
+  submit → admit → prefill_start/end → first_token → token[i]
+         → preempt/readmit → retire
+
+and aggregates four latency families as p50/p90/p99:
+
+- **TTFT** (submit → first token) is where QUEUEING and pool pressure
+  show up: a request stuck behind a full block pool or busy lanes
+  accrues TTFT before its prefill even starts.
+- **ITL** (token → next token) is where STALLS show up: a
+  preemption-by-recompute evicts the lane mid-decode, so the victim's
+  trace re-logs ``prefill_start/end`` on readmission but its TTFT does
+  NOT move (the first token was already delivered) — instead the stall
+  appears as one large inter-token gap. Reading a latency report:
+  high TTFT p99 → admit capacity problem; high ITL p99 with
+  ``preemptions > 0`` → pool too small (victims re-prefill).
+- **queue wait** (submit → first admission) isolates the scheduler
+  delay from prefill cost; **e2e** is the whole request.
+
+Every engine carries a registry (inject ``metrics=ServeMetrics()`` with
+a ``FakeClock`` for deterministic tests, or ``NullMetrics()`` to drop
+recording); ``eng.metrics_snapshot()`` returns the JSON report,
+``serve.metrics.format_summary`` renders the CLI table, and
+``eng.metrics.prometheus()`` emits text exposition.
+``python -m repro.launch.serve --paged --metrics-json m.json`` prints
+the table next to the byte report. The open-loop Poisson driver
+
+  PYTHONPATH=src python benchmarks/load_bench.py --quick
+
+replays a seeded mixed workload (MLPerf-style: exponential
+inter-arrival gaps, mixed prompt/output lengths, greedy + sampled
+lanes) through the paged engine and merges the percentiles into the
+``load`` section of ``BENCH_serve.json`` (CI diffs them warn-only —
+wall-clock noise; tok/s stays hard-gated). The demo below runs a
+pool-starved paged batch under a fake clock and prints the preempted
+request's ITL spike next to its unchanged TTFT.
 """
 import sys
 import time
@@ -243,6 +285,28 @@ def main():
     assert np.array_equal(got, alone)
     print(f"sampled decode (T=0.8, top-k 16, seed 7): {got.tolist()}")
     print("  mixed-batch stream == solo stream (admission-order invariant)")
+
+    # telemetry: a pool-starved run under a fake clock — the preempted
+    # request's TTFT stays anchored to its first token while the
+    # recompute stall lands in its ITL series (see module docstring)
+    from repro.serve.metrics import FakeClock, ServeMetrics, format_summary
+
+    m = ServeMetrics(FakeClock(tick=1.0))  # deterministic event times
+    starved = PagedEngine(
+        pcfg, qpk,
+        PagedServeConfig(ctx_len=32, block_size=4, max_batch=2,
+                         num_blocks=6),  # too small: forces preemption
+        metrics=m,
+    )
+    starved.generate([reqs[0], reqs[1]], max_new_tokens=8)
+    print(f"telemetry under preemption ({starved.preemptions} recompute"
+          f"{'s' if starved.preemptions != 1 else ''}):")
+    print(format_summary(starved.metrics_snapshot()))
+    victim = next(t for t in m.traces.values() if t.n_preempts)
+    print(f"  victim rid {victim.rid}: ttft {victim.ttft():.0f} ticks "
+          f"(unmoved), itls {[f'{d:.0f}' for d in victim.itls()]} — the "
+          f"large gap IS the preemption (prefill re-logged "
+          f"{victim.count('prefill_start')}x)")
 
     # single-matmul check: packed kernel == simulated quantization
     w = jax.tree.leaves(pruned)[3].astype(jnp.float32)

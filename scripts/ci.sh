@@ -11,7 +11,12 @@
 # kernel-vs-gather section (tokens/s + per-step attention workspace),
 # and the packed_scan section: trace time + HLO size of the packed
 # decode step vs depth under packed_exec scan/unroll — *_hlo_bytes and
-# *_trace_s keys are trend-only, never hard-gated).
+# *_trace_s keys are trend-only, never hard-gated). The Poisson load
+# harness (benchmarks/load_bench.py) then replays a seeded open-loop
+# request stream through the paged engine and merges TTFT / ITL /
+# queue-wait / e2e percentiles into the same bench file as the 'load'
+# section — *_ms_p50/p90/p99 and *_wait_ms keys are trend-only
+# (wall-clock noise); gen_tok_per_s stays hard-gated.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
@@ -19,5 +24,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 bench_out="$(mktemp -t bench_serve.XXXXXX.json)"
 trap 'rm -f "$bench_out"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_bench.py \
+    --quick --out "$bench_out"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/load_bench.py \
     --quick --out "$bench_out"
 python scripts/check_bench.py BENCH_serve.json "$bench_out"

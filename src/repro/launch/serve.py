@@ -41,6 +41,13 @@ Sampling knobs (``serve.sampling``) apply to BOTH engines:
   tokens bit-exactly regardless of batch composition or admission order
   — including under ``--paged`` continuous batching, where requests
   sharing the seed are decorrelated by their rid.
+
+Every run ends with a telemetry summary (``serve.metrics``): TTFT /
+inter-token-latency / queue-wait / end-to-end percentiles (paged runs;
+the lockstep engine reports counters), preemption and prefill-call
+counts, and per-step pool-occupancy / queue-depth gauges —
+``--metrics-json PATH`` dumps the full snapshot. For a Poisson
+open-loop latency distribution, use ``benchmarks/load_bench.py``.
 """
 from __future__ import annotations
 
@@ -53,6 +60,7 @@ import numpy as np
 
 from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.metrics import format_summary
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import PagedEngine, PagedServeConfig
 
@@ -108,6 +116,10 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged KV pool size (0 = auto; small values "
                          "exercise preemption)")
+    ap.add_argument("--metrics-json", type=str, default="",
+                    help="dump the end-of-run telemetry snapshot "
+                         "(lifecycle percentiles, counters, gauges) to "
+                         "this path as JSON")
     args = ap.parse_args()
 
     cfg = zoo.get_smoke_config(args.arch) if args.smoke else zoo.get_config(args.arch)
@@ -198,6 +210,15 @@ def main():
               f"of {st['cache_bytes_allocated']/1e6:.2f} MB pool; contiguous "
               f"caches would hold "
               f"{eng.contiguous_cache_bytes(args.batch)/1e6:.2f} MB")
+        # request-level telemetry (serve.metrics): TTFT/ITL/queue-wait
+        # percentiles + per-step pool/queue gauges, next to the byte
+        # report above — the same snapshot --metrics-json dumps
+        snap = eng.metrics_snapshot()
+        print("telemetry:")
+        print(format_summary(snap))
+        if args.metrics_json:
+            eng.metrics.to_json(args.metrics_json, extra_counters=st)
+            print(f"wrote metrics snapshot to {args.metrics_json}")
         print("sample:", out[0][:16].tolist())
         return
     eng = Engine(cfg, params, ServeConfig(max_new_tokens=args.new_tokens,
@@ -215,6 +236,13 @@ def main():
     out = eng.generate(prompts)
     dt = time.time() - t0
     print(f"steady state: {args.batch * args.new_tokens / dt:.1f} tok/s")
+    # the lockstep engine reports counters only (no per-token stamps)
+    snap = eng.metrics_snapshot()
+    print("telemetry:")
+    print(format_summary(snap))
+    if args.metrics_json:
+        eng.metrics.to_json(args.metrics_json, extra_counters=eng.stats())
+        print(f"wrote metrics snapshot to {args.metrics_json}")
     print("sample:", out[0][:16].tolist())
 
 

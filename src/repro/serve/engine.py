@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model_zoo as zoo
+from repro.serve.metrics import ServeMetrics
 from repro.serve.sampling import SamplingParams, observe, stack_lanes
 
 __all__ = ["ServeConfig", "Engine", "pad_rows_pow2", "split_prompt_chunks"]
@@ -107,7 +108,8 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg, params, serve_cfg: ServeConfig, adapters=None):
+    def __init__(self, cfg, params, serve_cfg: ServeConfig, adapters=None,
+                 metrics: Optional[ServeMetrics] = None):
         self.cfg = cfg
         self.params = params
         self.adapters = adapters
@@ -115,6 +117,13 @@ class Engine:
         self._step = jax.jit(zoo.serve_step_fn(cfg))
         self._sample = zoo.sampler_fn(cfg)
         self.n_traces = 0  # _generate compilations (one per shape bucket)
+        # host-side accounting mirroring PagedEngine.stats() names, so
+        # both engines report uniform rows through serve.metrics — the
+        # lockstep engine runs ONE bucketed prefill per generate() call
+        # and always decodes the full budget
+        self.decode_steps = 0
+        self.prefill_calls = 0
+        self.metrics = metrics if metrics is not None else ServeMetrics()
 
     def _prefill(self, tokens: jnp.ndarray, caches):
         """Process the prompt → (caches, pos, last_logits).
@@ -242,4 +251,31 @@ class Engine:
             jnp.asarray(rest_len, jnp.int32),
             {k: jnp.asarray(v) for k, v in lanes.items()},
         )
-        return np.asarray(out)[:B]
+        out = np.asarray(out)[:B]  # host sync: the work is done
+        self.prefill_calls += 1  # one bucketed prefill per generate()
+        self.decode_steps += self.scfg.max_new_tokens
+        return out
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counter surface matching :meth:`PagedEngine.stats` names.
+
+        Prefill and decode share ONE jitted ``_generate`` here, so
+        ``prefill_traces`` and ``decode_traces`` both report its shape-
+        bucket count (``n_traces``); ``decode_steps`` counts the full
+        per-call budget — the lockstep engine never retires early.
+        """
+        return {
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "prefill_traces": self.n_traces,
+            "decode_traces": self.n_traces,
+        }
+
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot with the engine counters merged in — the
+        same report shape ``PagedEngine.metrics_snapshot`` emits (the
+        lockstep engine has no per-token timestamps, so the latency
+        families are empty; counters and gauges still fill in)."""
+        return self.metrics.snapshot(extra_counters=self.stats())

@@ -1,0 +1,463 @@
+"""Request-level serving telemetry: lifecycle traces, counters, percentiles.
+
+The serving stack's end-of-run counters (``PagedEngine.stats()``) say how
+much work was done but not WHEN a request waited, was preempted, or saw
+its first token — exactly the signal a latency SLO (or the BO
+precision-allocation loop feeding runtime latency back into bit
+allocations) needs. This module is the host-side measurement substrate:
+
+- :class:`Clock` — injectable monotonic time source.
+  :class:`MonotonicClock` wraps ``time.monotonic``;
+  :class:`FakeClock` is hand-advanced (optionally auto-ticking) so
+  lifecycle tests are deterministic.
+- :class:`RequestTrace` — an append-only per-request event log
+  (``submit → admit → prefill_start/prefill_end → first_token →
+  token[i] → preempt/readmit → retire``) with derived latencies:
+  TTFT (first ``first_token`` minus ``submit`` — preemption-by-recompute
+  re-logs prefill events but never resets TTFT), queue wait (first
+  ``admit`` minus ``submit``), inter-token latencies (deltas between
+  consecutive emitted-token timestamps — a preemption shows up as one
+  large ITL gap, not a TTFT change), and end-to-end latency.
+- :class:`Counter` / :class:`Gauge` registries on
+  :class:`ServeMetrics` — counters are monotone totals (preemptions,
+  prefill calls); gauges are per-step sampled series (block-pool
+  occupancy, queue depth, active lanes) summarized as mean/max/last.
+- Aggregation — :func:`percentiles` (linear-interpolation quantiles,
+  the ``numpy.percentile`` convention; unit-tested against it),
+  :meth:`ServeMetrics.snapshot` (a JSON-able dict with p50/p90/p99 for
+  TTFT / ITL / queue-wait / e2e in milliseconds), and
+  :meth:`ServeMetrics.prometheus` (Prometheus text exposition).
+
+Hot-path discipline: everything here is host-side python executed AROUND
+the jitted engine steps — no event, counter, or gauge touches a traced
+function, so metrics-on decode stays bit-identical to metrics-off and
+``decode_traces`` stays 1 (``tests/test_continuous_batching.py`` is the
+regression). Engines take ``metrics=`` (default a wall-clock
+:class:`ServeMetrics`); pass :class:`NullMetrics` to drop recording
+entirely, or a ``FakeClock``-backed registry for deterministic tests.
+
+``benchmarks/load_bench.py`` drives a seeded Poisson arrival stream
+through :class:`~repro.serve.scheduler.PagedEngine` and turns these
+traces into the ``load`` section of ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional, Protocol, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Clock",
+    "MonotonicClock",
+    "FakeClock",
+    "Event",
+    "RequestTrace",
+    "Counter",
+    "Gauge",
+    "ServeMetrics",
+    "NullMetrics",
+    "percentiles",
+    "format_summary",
+    "LIFECYCLE_EVENTS",
+]
+
+#: canonical lifecycle vocabulary (engine integrations log only these)
+LIFECYCLE_EVENTS = (
+    "submit", "admit", "readmit", "prefill_start", "prefill_end",
+    "first_token", "token", "preempt", "retire",
+)
+
+#: events that mark an emitted token (the ITL series walks these)
+TOKEN_EVENTS = ("first_token", "token")
+
+#: percentile points every latency family reports
+PCTS = (50, 90, 99)
+
+
+# -- clocks -----------------------------------------------------------------
+
+
+class Clock(Protocol):
+    def now(self) -> float:  # seconds, monotone
+        ...
+
+
+class MonotonicClock:
+    """Wall clock: ``time.monotonic`` (the default for real runs)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class FakeClock:
+    """Hand-advanced clock for deterministic lifecycle tests.
+
+    ``tick`` > 0 auto-advances by that much on every ``now()`` read, so
+    an engine run under a FakeClock still produces strictly ordered
+    (and exactly reproducible) event times without any sleeping.
+    """
+
+    def __init__(self, start: float = 0.0, tick: float = 0.0):
+        self.t = float(start)
+        self.tick = float(tick)
+
+    def now(self) -> float:
+        t = self.t
+        self.t += self.tick
+        return t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"cannot advance a monotonic clock by {dt}")
+        self.t += dt
+
+
+# -- aggregation ------------------------------------------------------------
+
+
+def percentiles(xs: Sequence[float], pcts: Sequence[int] = PCTS) -> dict:
+    """``{"p50": ..., "p90": ..., "p99": ..., "mean": ..., "n": ...}``.
+
+    Quantiles use the linear-interpolation convention (rank
+    ``q/100 * (n-1)`` between sorted order statistics) — the
+    ``numpy.percentile`` default, which ``tests/test_metrics.py`` checks
+    against directly. Hand-rolled so the aggregator itself is the thing
+    under test, not a numpy re-export. Empty input → ``n: 0`` only.
+    """
+    xs = np.asarray(list(xs), np.float64)
+    if xs.size == 0:
+        return {"n": 0}
+    xs = np.sort(xs)
+    out = {}
+    for q in pcts:
+        rank = (q / 100.0) * (xs.size - 1)
+        lo = int(np.floor(rank))
+        hi = min(lo + 1, xs.size - 1)
+        out[f"p{q}"] = float(xs[lo] + (rank - lo) * (xs[hi] - xs[lo]))
+    out["mean"] = float(xs.mean())
+    out["n"] = int(xs.size)
+    return out
+
+
+# -- per-request lifecycle --------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    name: str
+    t: float
+
+
+class RequestTrace:
+    """Append-only event log for one request's lifecycle.
+
+    Times must be non-decreasing (the clock is monotone); ``log``
+    enforces it so a mis-ordered integration fails loudly in tests
+    rather than producing negative latencies.
+    """
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self.events: list[Event] = []
+
+    def log(self, name: str, t: float) -> None:
+        if name not in LIFECYCLE_EVENTS:
+            raise ValueError(f"unknown lifecycle event {name!r}")
+        if self.events and t < self.events[-1].t:
+            raise ValueError(
+                f"rid {self.rid}: event {name!r} at t={t} precedes "
+                f"{self.events[-1].name!r} at t={self.events[-1].t}"
+            )
+        self.events.append(Event(name, t))
+
+    # -- lookups ------------------------------------------------------------
+
+    def times_of(self, *names: str) -> list[float]:
+        return [e.t for e in self.events if e.name in names]
+
+    def first(self, *names: str) -> Optional[float]:
+        for e in self.events:
+            if e.name in names:
+                return e.t
+        return None
+
+    def count(self, *names: str) -> int:
+        return sum(1 for e in self.events if e.name in names)
+
+    # -- derived latencies (None while the anchoring events are absent) -----
+
+    @property
+    def submit_t(self) -> Optional[float]:
+        return self.first("submit")
+
+    @property
+    def retired(self) -> bool:
+        return self.count("retire") > 0
+
+    @property
+    def n_preempts(self) -> int:
+        return self.count("preempt")
+
+    def ttft(self) -> Optional[float]:
+        """First-token latency, anchored to the FIRST ``first_token``.
+
+        A later preemption re-runs prefill (``prefill_start`` appears
+        again) but the recomputed tokens are logged as ``token`` — the
+        user already saw the first token, so TTFT must not move.
+        """
+        s, f = self.first("submit"), self.first("first_token")
+        return None if s is None or f is None else f - s
+
+    def queue_wait(self) -> Optional[float]:
+        """Submit → first admission (readmits after preemption excluded)."""
+        s, a = self.first("submit"), self.first("admit")
+        return None if s is None or a is None else a - s
+
+    def e2e(self) -> Optional[float]:
+        s, r = self.first("submit"), self.first("retire")
+        return None if s is None or r is None else r - s
+
+    def itls(self) -> list[float]:
+        """Deltas between consecutive emitted-token timestamps.
+
+        The gap a preemption-by-recompute opens between the last token
+        before eviction and the first token after readmission lands
+        here as one large inter-token latency — ITL is where stalls
+        show up; TTFT is where queueing shows up.
+        """
+        ts = self.times_of(*TOKEN_EVENTS)
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+
+# -- registries -------------------------------------------------------------
+
+
+class Counter:
+    """Monotone total (preemptions, prefill calls, decode steps)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def set(self, v: int) -> None:
+        """Overwrite — for mirroring an engine-side counter wholesale."""
+        self.value = int(v)
+
+
+class Gauge:
+    """Per-step sampled series (pool occupancy, queue depth)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.samples: list[float] = []
+
+    def record(self, v: float) -> None:
+        self.samples.append(float(v))
+
+    def summary(self) -> dict:
+        if not self.samples:
+            return {"n": 0}
+        xs = np.asarray(self.samples, np.float64)
+        return {
+            "mean": float(xs.mean()),
+            "max": float(xs.max()),
+            "last": float(xs[-1]),
+            "n": int(xs.size),
+        }
+
+
+class ServeMetrics:
+    """Telemetry registry an engine logs into (host-side only).
+
+    One instance per engine (or share one across engines — rids must
+    then be globally unique). All recording is plain python on the host
+    side of the jitted step boundary.
+    """
+
+    enabled = True
+
+    def __init__(self, clock: Optional[Clock] = None):
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.traces: dict[int, RequestTrace] = {}
+        self.counters: dict[str, Counter] = {}
+        self.gauges: dict[str, Gauge] = {}
+
+    # -- recording ----------------------------------------------------------
+
+    def trace(self, rid: int) -> RequestTrace:
+        if rid not in self.traces:
+            self.traces[rid] = RequestTrace(rid)
+        return self.traces[rid]
+
+    def log(self, rid: int, event: str, t: Optional[float] = None) -> None:
+        self.trace(rid).log(event, self.clock.now() if t is None else t)
+
+    def counter(self, name: str) -> Counter:
+        if name not in self.counters:
+            self.counters[name] = Counter(name)
+        return self.counters[name]
+
+    def gauge(self, name: str) -> Gauge:
+        if name not in self.gauges:
+            self.gauges[name] = Gauge(name)
+        return self.gauges[name]
+
+    # -- aggregation --------------------------------------------------------
+
+    def latencies(self) -> dict[str, list[float]]:
+        """Raw per-family samples in ms (traces missing the anchoring
+        events — e.g. still queued at snapshot time — contribute
+        nothing to that family)."""
+        fams: dict[str, list[float]] = {
+            "ttft_ms": [], "itl_ms": [], "queue_wait_ms": [], "e2e_ms": [],
+        }
+        for tr in self.traces.values():
+            for fam, v in (("ttft_ms", tr.ttft()),
+                           ("queue_wait_ms", tr.queue_wait()),
+                           ("e2e_ms", tr.e2e())):
+                if v is not None:
+                    fams[fam].append(v * 1e3)
+            fams["itl_ms"].extend(d * 1e3 for d in tr.itls())
+        return fams
+
+    def snapshot(self, extra_counters: Optional[dict] = None) -> dict:
+        """JSON-able summary: request totals, counters, gauge summaries,
+        and p50/p90/p99 (+ mean, n) per latency family.
+
+        ``extra_counters`` merges an engine's own ``stats()`` dict in,
+        so one snapshot carries both the registry and the engine-side
+        accounting (engine values win on name collisions).
+        """
+        counters = {k: c.value for k, c in self.counters.items()}
+        if extra_counters:
+            counters.update({k: v for k, v in extra_counters.items()
+                             if isinstance(v, (int, np.integer))})
+        traces = list(self.traces.values())
+        return {
+            "requests": {
+                "submitted": len(traces),
+                "completed": sum(t.retired for t in traces),
+                "preempted": sum(t.n_preempts > 0 for t in traces),
+            },
+            "counters": counters,
+            "gauges": {k: g.summary() for k, g in self.gauges.items()},
+            "latency": {fam: percentiles(xs)
+                        for fam, xs in self.latencies().items()},
+        }
+
+    def prometheus(self, extra_counters: Optional[dict] = None) -> str:
+        """Prometheus text exposition (counters as ``_total``, gauge
+        ``mean``/``max``/``last`` sub-series, latency families as
+        summaries with ``quantile`` labels)."""
+        snap = self.snapshot(extra_counters)
+        lines: list[str] = []
+        for k, v in sorted(snap["counters"].items()):
+            lines.append(f"# TYPE serve_{k}_total counter")
+            lines.append(f"serve_{k}_total {v}")
+        for k, s in sorted(snap["gauges"].items()):
+            if not s.get("n"):
+                continue
+            lines.append(f"# TYPE serve_{k} gauge")
+            for sub in ("mean", "max", "last"):
+                lines.append(f'serve_{k}{{stat="{sub}"}} {s[sub]:.6g}')
+        for fam, s in sorted(snap["latency"].items()):
+            lines.append(f"# TYPE serve_{fam} summary")
+            if s.get("n"):
+                for q in PCTS:
+                    lines.append(
+                        f'serve_{fam}{{quantile="{q / 100}"}} '
+                        f"{s[f'p{q}']:.6g}"
+                    )
+            lines.append(f"serve_{fam}_count {s.get('n', 0)}")
+        return "\n".join(lines) + "\n"
+
+    def to_json(self, path: str, extra_counters: Optional[dict] = None) -> None:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(extra_counters), f, indent=2)
+
+
+class NullMetrics(ServeMetrics):
+    """Recording disabled: every hook is a no-op (the metrics-off arm of
+    the bit-identity regression). ``snapshot()`` still works — it just
+    reports nothing."""
+
+    enabled = False
+
+    class _SinkCounter(Counter):
+        def inc(self, n: int = 1) -> None:
+            pass
+
+        def set(self, v: int) -> None:
+            pass
+
+    class _SinkGauge(Gauge):
+        def record(self, v: float) -> None:
+            pass
+
+    def __init__(self):
+        super().__init__(clock=FakeClock())
+        self._counter = NullMetrics._SinkCounter("null")
+        self._gauge = NullMetrics._SinkGauge("null")
+
+    def log(self, rid: int, event: str, t: Optional[float] = None) -> None:
+        pass
+
+    def trace(self, rid: int) -> RequestTrace:
+        return RequestTrace(rid)  # detached: never registered
+
+    def counter(self, name: str) -> Counter:
+        return self._counter
+
+    def gauge(self, name: str) -> Gauge:
+        return self._gauge
+
+
+# -- human-readable summary -------------------------------------------------
+
+
+def format_summary(snap: dict) -> str:
+    """Fixed-width end-of-run table from a :meth:`ServeMetrics.snapshot`.
+
+    ``launch.serve`` and ``benchmarks/load_bench`` both print this, so
+    the contiguous and paged engines read identically at the CLI.
+    """
+    lines = []
+    req = snap.get("requests", {})
+    lines.append(
+        f"requests: {req.get('completed', 0)}/{req.get('submitted', 0)} "
+        f"completed, {req.get('preempted', 0)} preempted at least once"
+    )
+    lat = snap.get("latency", {})
+    rows = [(fam, s) for fam, s in lat.items() if s.get("n")]
+    if rows:
+        lines.append(
+            f"  {'latency':14s} {'p50':>9s} {'p90':>9s} {'p99':>9s} "
+            f"{'mean':>9s} {'n':>6s}"
+        )
+        for fam, s in rows:
+            lines.append(
+                f"  {fam:14s} {s['p50']:9.2f} {s['p90']:9.2f} "
+                f"{s['p99']:9.2f} {s['mean']:9.2f} {s['n']:6d}"
+            )
+    ctr = snap.get("counters", {})
+    if ctr:
+        keys = ("decode_steps", "prefill_calls", "prefill_traces",
+                "decode_traces", "preemptions", "early_stops")
+        shown = {k: ctr[k] for k in keys if k in ctr}
+        shown.update({k: v for k, v in sorted(ctr.items())
+                      if k not in shown and k not in keys})
+        lines.append("  counters: " + "  ".join(
+            f"{k}={v}" for k, v in shown.items()))
+    for name, s in sorted(snap.get("gauges", {}).items()):
+        if s.get("n"):
+            lines.append(
+                f"  {name}: mean {s['mean']:.3f}  max {s['max']:.3f}  "
+                f"last {s['last']:.3f}  ({s['n']} samples)"
+            )
+    return "\n".join(lines)

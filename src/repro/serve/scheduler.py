@@ -56,6 +56,16 @@ is preempted by *recompute* (vLLM-style): its blocks are freed and it is
 requeued with ``prompt + emitted`` as the new prompt, which re-prefills
 to the exact same continuation (positions AND penalty counts resume at
 their pre-eviction values, so the RNG stream is unchanged).
+
+Telemetry (``serve.metrics``): the engine logs each request's lifecycle
+(``submit → admit → prefill_start/end → first_token → token[i] →
+preempt/readmit → retire``) into an injectable :class:`ServeMetrics`
+registry and samples pool occupancy / queue depth / active lanes once
+per decode step — ALL host-side, around the jitted calls, so the
+compiled step (and every sampled token) is bit-identical with metrics
+on, off (:class:`~repro.serve.metrics.NullMetrics`), or fake-clocked.
+``metrics_snapshot()`` aggregates TTFT / inter-token / queue-wait /
+end-to-end percentiles plus the ``stats()`` totals.
 """
 from __future__ import annotations
 
@@ -70,6 +80,7 @@ import numpy as np
 from repro.models import model_zoo as zoo
 from repro.serve import sampling as smp
 from repro.serve.engine import pad_rows_pow2, split_prompt_chunks
+from repro.serve.metrics import ServeMetrics
 from repro.serve.sampling import GREEDY, SamplingParams
 
 __all__ = ["PagedServeConfig", "BlockAllocator", "Request", "PagedEngine"]
@@ -117,21 +128,28 @@ class BlockAllocator:
 
     Block 0 (:data:`TRASH_BLOCK`) is reserved and never handed out —
     inactive lanes and not-yet-allocated table entries point there.
+
+    ``metrics`` (a :class:`~repro.serve.metrics.ServeMetrics`) counts
+    block grants/returns and alloc failures — the host-side signal for
+    pool pressure that pairs with the engine's per-step occupancy gauge.
     """
 
-    def __init__(self, num_blocks: int):
+    def __init__(self, num_blocks: int, metrics: Optional[ServeMetrics] = None):
         if num_blocks < 2:
             raise ValueError("need at least one block besides the trash block")
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))  # pop() → low ids first
         self._owned: set[int] = set()  # ids currently allocated to requests
+        self.metrics = metrics if metrics is not None else ServeMetrics()
 
     def alloc(self, n: int) -> Optional[list[int]]:
         """n fresh block ids, or None (all-or-nothing) if the pool is dry."""
         if n > len(self._free):
+            self.metrics.counter("block_alloc_failures").inc()
             return None
         out = [self._free.pop() for _ in range(n)]
         self._owned.update(out)
+        self.metrics.counter("blocks_allocated").inc(n)
         return out
 
     def release(self, ids: list[int]) -> None:
@@ -157,6 +175,7 @@ class BlockAllocator:
         for i in ids:
             self._owned.discard(i)
             self._free.append(i)
+        self.metrics.counter("blocks_released").inc(len(ids))
 
     @property
     def n_free(self) -> int:
@@ -170,7 +189,8 @@ class BlockAllocator:
 class PagedEngine:
     """Continuous-batching serving engine over paged KV pools."""
 
-    def __init__(self, cfg, params, pcfg: PagedServeConfig, adapters=None):
+    def __init__(self, cfg, params, pcfg: PagedServeConfig, adapters=None,
+                 metrics: Optional[ServeMetrics] = None):
         if not zoo.supports_paged_decode(cfg):
             raise ValueError(
                 f"{cfg.name}: paged serving needs an attention-only "
@@ -180,12 +200,17 @@ class PagedEngine:
         self.params = params
         self.pcfg = pcfg
         self.adapters = adapters
+        # telemetry registry (serve.metrics): lifecycle events, counters,
+        # and per-step gauges — all recorded HOST-side around the jitted
+        # calls, never inside them, so the compiled step is untouched
+        # (tests assert metrics-on tokens == metrics-off, decode_traces 1)
+        self.metrics = metrics if metrics is not None else ServeMetrics()
         bs = pcfg.block_size
         self.cap = pcfg.ctx_len
         self.logical_len = zoo.paged_logical_len(cfg, self.cap)
         self.nmax = -(-self.logical_len // bs)  # table width (blocks/request)
         nb = pcfg.num_blocks or (pcfg.max_batch * self.nmax + 1)
-        self.allocator = BlockAllocator(nb)
+        self.allocator = BlockAllocator(nb, metrics=self.metrics)
         self.pools = zoo.paged_cache_init(cfg)(cfg, nb, bs)
         # byte accounting: keep the WHOLE pool footprint and derive live
         # bytes as pool_bytes * n_used // nb (multiply, then ONE divide)
@@ -325,6 +350,7 @@ class PagedEngine:
             raise ValueError(f"rid {rid} already used in this engine")
         self._used_rids.add(rid)
         self.queue.append(Request(rid, prompt, max_new, sampling))
+        self.metrics.log(rid, "submit")
         return rid
 
     def _finished(self, req: Request) -> bool:
@@ -392,6 +418,17 @@ class PagedEngine:
             prompts, self.pcfg.prefill_chunk
         )
         self.prefill_calls += 1
+        # lifecycle: a request's FIRST admission logs "admit" (its
+        # queue-wait anchor); a re-admission after preemption-by-
+        # recompute logs "readmit" and re-logs the prefill pair — the
+        # recompute really does run prefill again — without touching
+        # the admit/first_token anchors (TTFT must not move).
+        for req in reqs:
+            seen = self.metrics.trace(req.rid)
+            self.metrics.log(
+                req.rid, "readmit" if seen.count("admit") else "admit"
+            )
+            self.metrics.log(req.rid, "prefill_start")
         logits, caches = self._prefill(
             self.params,
             jnp.asarray(main),
@@ -407,6 +444,10 @@ class PagedEngine:
              "counts": jnp.asarray(cnts)},
             jnp.full((prompts.shape[0],), S, jnp.int32),
         ))
+        # prefill_end stamps AFTER the host sync above — jax dispatch is
+        # async, so timing the call line would measure enqueue, not work
+        for req in reqs:
+            self.metrics.log(req.rid, "prefill_end")
         for j, req in enumerate(reqs):
             lane = req.lane
             brow = np.zeros((self.nmax,), np.int32)
@@ -421,6 +462,13 @@ class PagedEngine:
             cnt = cnts[j].copy()
             cnt[tok0] += 1
             req.emitted.append(tok0)
+            # a readmitted request already showed its first token before
+            # eviction; the recomputed draw is just the next "token"
+            self.metrics.log(
+                req.rid,
+                "token" if self.metrics.trace(req.rid).count("first_token")
+                else "first_token",
+            )
             self.lanes[lane] = req
             self.tables = self.tables.at[lane].set(jnp.asarray(brow))
             self.counts = self.counts.at[lane].set(jnp.asarray(cnt))
@@ -448,6 +496,7 @@ class PagedEngine:
         # counts/samp rows are overwritten by the next admit; inactive
         # lanes never update them (observe masks on ``active``)
         self.done[req.rid] = np.asarray(req.emitted, np.int32)
+        self.metrics.log(req.rid, "retire")
 
     def _preempt(self, lane: int) -> None:
         """Evict by recompute: free the lane, requeue prompt + emitted."""
@@ -463,6 +512,7 @@ class PagedEngine:
         self.tables = self.tables.at[lane].set(TRASH_BLOCK)
         self.queue.appendleft(req)
         self.preemptions += 1
+        self.metrics.log(req.rid, "preempt")
 
     def _youngest_active(self) -> Optional[int]:
         lanes = [l for l, r in enumerate(self.lanes) if r is not None]
@@ -516,6 +566,13 @@ class PagedEngine:
         if not np.any(self.active):  # everyone preempted
             return True
         self.peak_blocks_live = max(self.peak_blocks_live, self.allocator.n_used)
+        # per-step gauges, sampled on the host right before the step:
+        # occupancy is over the allocatable pool (trash block excluded)
+        self.metrics.gauge("pool_occupancy").record(
+            self.allocator.n_used / max(self.allocator.num_blocks - 1, 1)
+        )
+        self.metrics.gauge("queue_depth").record(len(self.queue))
+        self.metrics.gauge("active_lanes").record(int(np.sum(self.active)))
         if self._samp_dev is None:
             self._samp_dev = {k: jnp.asarray(v) for k, v in self.samp.items()}
         nxt, self.pools, self.counts = self._step(
@@ -528,13 +585,14 @@ class PagedEngine:
             self._samp_dev,
             self.counts,
         )
-        nxt = np.asarray(nxt)
+        nxt = np.asarray(nxt)  # host sync: tokens (and their stamps) are real
         self.decode_steps += 1
         for lane, req in enumerate(self.lanes):
             if req is None or not self.active[lane]:
                 continue
             self.pos[lane] += 1
             req.emitted.append(int(nxt[lane]))
+            self.metrics.log(req.rid, "token")
             self.last_tok[lane] = nxt[lane]
             if self._finished(req):
                 self._retire(lane)
@@ -583,6 +641,13 @@ class PagedEngine:
             "prefill_traces": self.prefill_traces,
             "prefill_calls": self.prefill_calls,
         }
+
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot with the engine counters merged in — ONE
+        JSON-able report carrying lifecycle percentiles (TTFT / ITL /
+        queue-wait / e2e), per-step gauges, and the ``stats()`` totals
+        (``serve.metrics.format_summary`` renders it)."""
+        return self.metrics.snapshot(extra_counters=self.stats())
 
     def contiguous_cache_bytes(self, n_requests: int) -> int:
         """What the contiguous engine would allocate for the same load."""

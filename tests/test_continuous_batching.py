@@ -13,6 +13,7 @@ import pytest
 from serving_oracle import assert_matches_oracle, oracle_generate
 from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.metrics import FakeClock, NullMetrics, ServeMetrics
 from repro.serve.sampling import SamplingParams, truncate_at_stop
 from repro.serve.scheduler import BlockAllocator, PagedEngine, PagedServeConfig
 
@@ -291,6 +292,37 @@ def test_block_byte_accounting_matches_tree_byte_sum():
         assert eng.stats()["cache_bytes_live"] == tree_bytes * used // nb
         assert eng.stats()["peak_cache_bytes_live"] >= \
             eng.stats()["cache_bytes_live"]
+
+
+def test_metrics_on_changes_no_sampled_token_and_never_retraces():
+    """Telemetry is strictly host-side: a fully-instrumented run (real
+    registry, fake clock, forced preemption, stochastic + greedy lanes)
+    emits bit-identical tokens to a NullMetrics run, and the decode step
+    still compiles exactly once in both."""
+    rng = np.random.default_rng(105)
+    cfg, params = _smoke()
+    prompts = [rng.integers(0, 512, (n,)).astype(np.int32)
+               for n in (3, 10, 6)]
+    sps = [
+        SamplingParams(temperature=0.9, top_k=8, seed=3),
+        SamplingParams(),  # greedy lane in the same mix
+        SamplingParams(temperature=1.1, top_p=0.9,
+                       repetition_penalty=1.1, seed=4),
+    ]
+    outs = {}
+    for tag, metrics in (("on", ServeMetrics(FakeClock(tick=1.0))),
+                         ("off", NullMetrics())):
+        eng = PagedEngine(
+            cfg, params,
+            PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=2,
+                             prefill_chunk=CHUNK, num_blocks=6),
+            metrics=metrics,
+        )
+        outs[tag] = eng.generate(prompts, 8, sampling=sps)
+        assert eng.decode_traces == 1, f"metrics-{tag} retraced decode"
+        assert eng.preemptions >= 1  # both arms exercised recompute
+    for a, b in zip(outs["on"], outs["off"]):
+        np.testing.assert_array_equal(a, b)
 
 
 # ---------------------------------------------------------------------------

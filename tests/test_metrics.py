@@ -1,0 +1,230 @@
+"""Serving telemetry: aggregator vs numpy, lifecycle invariants, engines.
+
+The percentile aggregator is checked against ``numpy.percentile`` on
+known distributions; lifecycle semantics (TTFT anchored to the FIRST
+``first_token``, preemption-by-recompute re-logging prefill without
+resetting TTFT, monotone event times) are pinned with a hand-driven
+:class:`FakeClock`; and an end-to-end :class:`PagedEngine` run under a
+ticking fake clock asserts the engine emits a well-formed trace for
+every request — including a preempted one. The metrics-on vs metrics-off
+bit-identity regression lives in ``test_continuous_batching.py``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import model_zoo as zoo
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.metrics import (
+    FakeClock,
+    NullMetrics,
+    RequestTrace,
+    ServeMetrics,
+    format_summary,
+    percentiles,
+)
+from repro.serve.scheduler import PagedEngine, PagedServeConfig
+
+CAP, BS, CHUNK = 32, 4, 8
+
+
+def _smoke():
+    cfg = zoo.get_smoke_config("llama7b_like")
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# -- percentile aggregator vs numpy reference -------------------------------
+
+
+@pytest.mark.parametrize("dist", ["uniform", "exponential", "lognormal",
+                                  "constant"])
+@pytest.mark.parametrize("n", [1, 2, 3, 10, 1000])
+def test_percentiles_match_numpy(dist, n):
+    rng = np.random.default_rng(5)
+    xs = {
+        "uniform": rng.uniform(0, 100, n),
+        "exponential": rng.exponential(7.0, n),
+        "lognormal": rng.lognormal(1.0, 0.8, n),
+        "constant": np.full(n, 3.25),
+    }[dist]
+    got = percentiles(xs)
+    assert got["n"] == n
+    assert got["mean"] == pytest.approx(float(np.mean(xs)))
+    for q in (50, 90, 99):
+        assert got[f"p{q}"] == pytest.approx(
+            float(np.percentile(xs, q)), rel=1e-12, abs=1e-12
+        ), f"p{q} mismatch on {dist}(n={n})"
+
+
+def test_percentiles_empty_and_order_free():
+    assert percentiles([]) == {"n": 0}
+    xs = [5.0, 1.0, 9.0, 3.0]
+    assert percentiles(xs) == percentiles(sorted(xs))
+
+
+# -- lifecycle semantics under a hand-driven fake clock ---------------------
+
+
+def test_fake_clock_lifecycle_latencies():
+    m = ServeMetrics(FakeClock())
+    m.log(0, "submit", 0.0)
+    m.log(0, "admit", 1.5)
+    m.log(0, "prefill_start", 1.5)
+    m.log(0, "prefill_end", 2.0)
+    m.log(0, "first_token", 2.0)
+    m.log(0, "token", 3.0)
+    m.log(0, "token", 3.5)
+    m.log(0, "retire", 3.5)
+    tr = m.trace(0)
+    assert tr.ttft() == pytest.approx(2.0)
+    assert tr.queue_wait() == pytest.approx(1.5)
+    assert tr.e2e() == pytest.approx(3.5)
+    assert tr.itls() == pytest.approx([1.0, 0.5])
+    assert tr.retired and tr.n_preempts == 0
+    lat = m.snapshot()["latency"]
+    assert lat["ttft_ms"]["p50"] == pytest.approx(2000.0)
+    assert lat["itl_ms"]["n"] == 2
+
+
+def test_preemption_relogs_prefill_but_never_resets_ttft():
+    """The recompute readmission runs prefill again (events re-logged)
+    but the user already saw the first token — TTFT must not move, and
+    the stall surfaces as ONE large inter-token latency instead."""
+    m = ServeMetrics(FakeClock())
+    for name, t in [("submit", 0.0), ("admit", 1.0), ("prefill_start", 1.0),
+                    ("prefill_end", 2.0), ("first_token", 2.0),
+                    ("token", 3.0), ("preempt", 4.0), ("readmit", 9.0),
+                    ("prefill_start", 9.0), ("prefill_end", 10.0),
+                    ("token", 10.0), ("token", 11.0), ("retire", 11.0)]:
+        m.log(7, name, t)
+    tr = m.trace(7)
+    assert tr.ttft() == pytest.approx(2.0)  # anchored to FIRST first_token
+    assert tr.queue_wait() == pytest.approx(1.0)  # readmit is not an admit
+    assert tr.n_preempts == 1
+    assert tr.count("prefill_start") == 2  # recompute re-ran prefill
+    assert tr.count("first_token") == 1
+    # the preemption gap is the 7s ITL between t=3 and t=10
+    assert tr.itls() == pytest.approx([1.0, 7.0, 1.0])
+    assert tr.e2e() == pytest.approx(11.0)
+
+
+def test_event_times_must_be_monotone():
+    tr = RequestTrace(0)
+    tr.log("submit", 5.0)
+    with pytest.raises(ValueError, match="precedes"):
+        tr.log("admit", 4.0)
+    with pytest.raises(ValueError, match="unknown lifecycle"):
+        tr.log("teleport", 6.0)
+
+
+def test_fake_clock_advances_and_ticks():
+    c = FakeClock(start=2.0)
+    assert c.now() == 2.0 and c.now() == 2.0  # tick=0: manual only
+    c.advance(1.5)
+    assert c.now() == 3.5
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+    t = FakeClock(tick=0.25)
+    assert [t.now(), t.now(), t.now()] == [0.0, 0.25, 0.5]
+
+
+# -- engine integration (fake-clocked paged run, forced preemption) ---------
+
+
+def test_paged_engine_emits_wellformed_traces_under_preemption():
+    cfg, params = _smoke()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 512, (n,)).astype(np.int32) for n in (3, 10)]
+    m = ServeMetrics(FakeClock(tick=1.0))  # strictly ordered, no sleeping
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=2,
+                         prefill_chunk=CHUNK, num_blocks=6),
+        metrics=m,
+    )
+    eng.generate(prompts, 8)
+    assert eng.preemptions >= 1  # the tiny pool forced a recompute
+    assert set(m.traces) == {0, 1}
+    preempted = [t for t in m.traces.values() if t.n_preempts]
+    assert preempted, "no trace recorded the preemption"
+    for tr in m.traces.values():
+        names = [e.name for e in tr.events]
+        # ordering invariants: one submit first, one retire last, one
+        # first_token, admit before it; times monotone by construction
+        assert names[0] == "submit" and names[-1] == "retire"
+        assert names.count("submit") == names.count("retire") == 1
+        assert names.count("first_token") == 1
+        assert names.index("admit") < names.index("first_token")
+        assert tr.count("readmit") == tr.n_preempts
+        # every prefill_start has a matching prefill_end, and a
+        # recompute re-logs the pair
+        assert tr.count("prefill_start") == tr.count("prefill_end")
+        assert tr.count("prefill_start") == 1 + tr.n_preempts
+        # the full budget was emitted exactly once per token: recompute
+        # replays the KV, not the stream (no duplicate token events)
+        assert tr.count("first_token", "token") == 8
+        assert tr.ttft() is not None and tr.e2e() is not None
+    # per-step gauges sampled once per decode step
+    snap = eng.metrics_snapshot()
+    assert snap["gauges"]["pool_occupancy"]["n"] == eng.decode_steps
+    assert snap["gauges"]["pool_occupancy"]["max"] <= 1.0
+    assert snap["counters"]["preemptions"] == eng.preemptions
+    assert snap["requests"] == {"submitted": 2, "completed": 2,
+                                "preempted": len(preempted)}
+    for fam in ("ttft_ms", "itl_ms", "queue_wait_ms", "e2e_ms"):
+        assert snap["latency"][fam]["n"] > 0
+    # allocator hooks: every granted block came back
+    assert snap["counters"]["blocks_allocated"] == \
+        snap["counters"]["blocks_released"]
+
+
+def test_prometheus_and_summary_render():
+    cfg, params = _smoke()
+    rng = np.random.default_rng(12)
+    m = ServeMetrics(FakeClock(tick=1.0))
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=CAP, block_size=BS, max_batch=2,
+                         prefill_chunk=CHUNK),
+        metrics=m,
+    )
+    eng.generate([rng.integers(0, 512, (5,)).astype(np.int32)], 4)
+    text = m.prometheus(extra_counters=eng.stats())
+    assert "# TYPE serve_ttft_ms summary" in text
+    assert 'serve_ttft_ms{quantile="0.5"}' in text
+    assert "serve_preemptions_total 0" in text
+    assert 'serve_pool_occupancy{stat="mean"}' in text
+    table = format_summary(eng.metrics_snapshot())
+    assert "ttft_ms" in table and "decode_traces=1" in table
+
+
+def test_null_metrics_records_nothing():
+    m = NullMetrics()
+    m.log(0, "submit")
+    m.counter("x").inc(5)
+    m.gauge("g").record(1.0)
+    assert not m.enabled
+    assert m.traces == {} and m.counter("x").value == 0
+    assert m.snapshot()["requests"]["submitted"] == 0
+
+
+# -- contiguous Engine: uniform stats surface -------------------------------
+
+
+def test_engine_stats_surface_matches_paged_names():
+    cfg, params = _smoke()
+    eng = Engine(cfg, params,
+                 ServeConfig(max_new_tokens=4, ctx_len=CAP, prefill_chunk=8))
+    rng = np.random.default_rng(13)
+    eng.generate(rng.integers(0, 512, (2, 9)).astype(np.int32))
+    eng.generate(rng.integers(0, 512, (2, 9)).astype(np.int32))
+    st = eng.stats()
+    assert st == {"decode_steps": 8, "prefill_calls": 2,
+                  "prefill_traces": 1, "decode_traces": 1}
+    peng = PagedEngine(cfg, params,
+                       PagedServeConfig(ctx_len=CAP, block_size=BS))
+    assert set(st) <= set(peng.stats())  # uniform row keys
+    snap = eng.metrics_snapshot()
+    assert snap["counters"]["prefill_calls"] == 2
+    assert snap["latency"]["ttft_ms"] == {"n": 0}  # lockstep: no stamps
