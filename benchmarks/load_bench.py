@@ -165,9 +165,9 @@ def main():
     burst = [wrng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
              for _ in range(args.max_batch)]
     eng.generate(burst, 4)
-    s0, t0 = eng.decode_steps, time.perf_counter()
+    s0, t0 = eng.decode_steps, metrics.clock.now()
     eng.generate(burst, 4)
-    step_rate = (eng.decode_steps - s0) / max(time.perf_counter() - t0, 1e-9)
+    step_rate = (eng.decode_steps - s0) / max(metrics.clock.now() - t0, 1e-9)
     # token service capacity ≈ step_rate · max_batch lanes; offered load
     # ~1.3x capacity keeps the queue non-empty without runaway backlog
     cap_req_s = step_rate * args.max_batch / float(np.mean(OUT_LENS))

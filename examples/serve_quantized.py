@@ -180,6 +180,52 @@ lanes) through the paged engine and merges the percentiles into the
 wall-clock noise; tok/s stays hard-gated). The demo below runs a
 pool-starved paged batch under a fake clock and prints the preempted
 request's ITL spike next to its unchanged TTFT.
+
+Machine-checked invariants (tracelint + the HLO budget gate)
+------------------------------------------------------------
+Everything above leans on contracts that are invisible at runtime —
+until they break as a silent retrace or a trace-time constant. Two CI
+gates check them statically:
+
+  PYTHONPATH=src python -m repro.analysis.cli src tests benchmarks
+  PYTHONPATH=src python scripts/hlo_budget.py
+
+**tracelint** walks the call graph from every jit boundary (``jax.jit``
+call sites and decorators, ``lax.scan``/``cond``/``while_loop`` bodies,
+``pl.pallas_call`` kernels, factory-produced step fns) and flags host
+effects on the compiled path: the Python body of a jitted function runs
+ONCE per compiled shape, so a ``time.time()`` there reads trace time, a
+``np.random`` draw freezes one sample into the program forever, a
+``metrics.counter(...).inc()`` fires per-compile instead of per-call,
+and Python ``if``/``while`` on a traced value either crashes or forks a
+recompile per branch. It also checks the Pallas invariants (kernel
+params used as Refs, static grids/BlockSpec shapes, pure index maps)
+and the repo conventions (seeded local ``default_rng`` only, host
+clocks confined to ``launch/``/``benchmarks/`` and the injectable
+``serve.metrics.Clock``, bench metric keys matching the
+``check_bench.py`` suffix contract, packed bit widths in {4, 8, 16}).
+
+Reading a finding: ``path:line: [rule-id] message [compiled path: ...]``
+— the bracketed provenance names the jit boundary the function is
+reachable from. ``--explain RULE-ID`` prints the full rationale. An
+INTENTIONAL violation (e.g. ``self.decode_traces += 1``, which counts
+compilations precisely BECAUSE the body runs once per trace) is
+silenced inline with a mandatory reason:
+
+  self.decode_traces += 1  # tracelint: allow[purity-state-mutation] -- trace counter
+
+A reasonless ``allow[...]`` is itself a finding, so the repo carries
+zero unexplained suppressions.
+
+**hlo_budget** lowers the canonical programs (the packed scan decode
+step at 8 and 16 layers, the paged decode step, the contiguous
+``_generate``) and asserts against the committed ``HLO_BUDGET.json``:
+trace counts stay at 1 (a mixed-length paged generate must NOT retrace
+as the lane mix churns), the packed scan HLO stays depth-independent
+(L16/L8 bytes within 1.10x — the group-schedule contract above), and
+module sizes stay within budget (warn >1.2x, fail >2x, mirroring
+check_bench semantics). Re-baseline deliberate changes with
+``--update-baseline``.
 """
 import sys
 import time

@@ -16,25 +16,29 @@ import sys
 
 HARD_FACTOR = 2.0
 
-# trend-only metrics: printed with a direction but NEVER hard-gated —
-# HLO text size and trace wall-time move with jax versions, and the
-# load-harness latency percentiles (*_ms_p50/p90/p99, *_wait_ms from
-# benchmarks/load_bench.py) are host wall-clock noise on CI runners;
-# the hard gates stay on tok/s and byte counts
-WARN_ONLY_SUFFIXES = ("_hlo_bytes", "_trace_s",
-                      "_ms_p50", "_ms_p90", "_ms_p99", "_wait_ms",
-                      "_ms_mean")
+# Suffix semantics (mirrored by repro.analysis.conventions, which lints
+# benchmark metric keys against them; the sync test lives in
+# tests/test_check_bench.py):
+#
+# - HIGHER_IS_BETTER / LOWER_IS_BETTER classify the trend direction;
+# - WARN_ONLY metrics print their trend but are NEVER hard-gated — HLO
+#   text size and trace wall-time move with jax versions, and the
+#   load-harness latency percentiles (*_ms_p50/p90/p99, *_wait_ms from
+#   benchmarks/load_bench.py) are host wall-clock noise on CI runners;
+#   the hard gates stay on tok/s and byte counts.
+HIGHER_IS_BETTER = ("_tok_per_s",)
+LOWER_IS_BETTER = ("_trace_s", "_ms_p50", "_ms_p90", "_ms_p99",
+                   "_wait_ms", "_ms_mean")
+WARN_ONLY_SUFFIXES = ("_hlo_bytes",) + LOWER_IS_BETTER
 
 
 def _direction(metric: str):
     """+1 higher-is-better, -1 lower-is-better, 0 informational."""
-    if metric.endswith("_tok_per_s"):
+    if metric.endswith(HIGHER_IS_BETTER):
         return 1
-    if metric.endswith("_trace_s"):
+    if metric.endswith(LOWER_IS_BETTER):
         return -1
-    if metric.endswith(WARN_ONLY_SUFFIXES[2:]):  # latency: lower wins
-        return -1
-    if "bytes" in metric:
+    if "bytes" in metric:  # _hlo_bytes, kv_bytes, weight_bytes, ...
         return -1
     return 0
 

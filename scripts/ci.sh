@@ -21,6 +21,20 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+# Static gates (hard-fail). tracelint walks the call graph from every
+# jit boundary and rejects host effects on the compiled path (clocks,
+# numpy RNG, metrics stamps, Python branches on tracers), Pallas
+# invariant breaks, and convention drift (metric-key suffixes, bit
+# literals, clock zones) — zero unsuppressed findings allowed; every
+# allow[...] needs a reason. hlo_budget then LOWERS the canonical
+# programs and asserts trace counts (exact: the paged decode step and
+# the contiguous _generate trace once) and HLO-size budgets vs the
+# committed HLO_BUDGET.json (warn >1.2x, fail >2x — same shape as the
+# bench gate below; packed scan depth-growth L16/L8 <= 1.10x is hard).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.cli \
+    src tests benchmarks
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/hlo_budget.py
+
 bench_out="$(mktemp -t bench_serve.XXXXXX.json)"
 trap 'rm -f "$bench_out"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_bench.py \

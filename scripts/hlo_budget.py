@@ -1,0 +1,252 @@
+#!/usr/bin/env python
+"""Compile-time gate: trace counts and HLO-size budgets for the
+canonical serving programs.
+
+  PYTHONPATH=src python scripts/hlo_budget.py                  # gate
+  PYTHONPATH=src python scripts/hlo_budget.py --update-baseline
+
+Lowers (traces, does not compile) the programs the serving stack
+actually runs and checks them against the committed ``HLO_BUDGET.json``:
+
+- ``packed_scan_L8`` / ``packed_scan_L16`` — the packed mixed-precision
+  decode step under ``packed_exec="scan"`` at two depths. Scan HLO holds
+  one body per bit group (the banded allocation pins 3 groups at any
+  depth), so size must be depth-INDEPENDENT: the L16/L8 byte ratio is
+  hard-gated against ``max_scan_depth_growth``.
+- ``paged_decode_step`` — PagedEngine's jitted decode step; a real
+  mixed-length generate must leave ``decode_traces == 1``.
+- ``contiguous_generate`` — Engine's whole-generation program; two
+  same-shape calls must leave ``n_traces == 1``.
+
+Gate semantics (mirroring scripts/check_bench.py): trace counts are
+hard-gated (exact match); HLO byte sizes warn above ``WARN_FACTOR``
+(1.2x) and fail above ``HARD_FACTOR`` (2x) — HLO text grows with jax
+versions, so the soft band absorbs upgrades while still catching a
+program that doubled.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixed_precision import group_schedule
+from repro.core.qpruner import QPrunerConfig, quantize_blocks
+from repro.models import model_zoo as zoo
+from repro.serve.engine import Engine, ServeConfig, pad_rows_pow2, \
+    split_prompt_chunks
+from repro.serve.sampling import SamplingParams, stack_lanes
+from repro.serve.scheduler import PagedEngine, PagedServeConfig
+
+WARN_FACTOR = 1.2
+HARD_FACTOR = 2.0
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "HLO_BUDGET.json"
+
+# the committed depth-growth ceiling for the packed scan step: with a
+# 3-group banded schedule the scan HLO is per-GROUP, so doubling the
+# depth should leave the module size flat modulo constant folding
+MAX_SCAN_DEPTH_GROWTH = 1.10
+
+SCAN_DEPTHS = (8, 16)
+
+
+def _banded_bits(depth: int) -> np.ndarray:
+    """8-bit head/tail band, 4-bit middle → 3 groups at any depth."""
+    bits = np.full(depth, 4)
+    band = max(1, depth // 4)
+    bits[:band] = 8
+    bits[-band:] = 8
+    assert len(group_schedule(bits)) == 3, (depth, bits)
+    return bits
+
+
+def _measure_packed_scan(base_cfg) -> dict:
+    out = {}
+    qcfg = QPrunerConfig()
+    for depth in SCAN_DEPTHS:
+        cfg = base_cfg.with_(n_layers=depth, packed_exec="scan")
+        params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+        packed, _, _ = quantize_blocks(
+            cfg, params, _banded_bits(depth), qcfg,
+            init_adapters=False, pack=True
+        )
+        caches = zoo.cache_init(cfg)(cfg, 2, 32)
+        toks = jnp.zeros((2, 1), jnp.int32)
+        pos = jnp.asarray(0, jnp.int32)
+
+        traces = {"n": 0}
+        step = zoo.serve_step_fn(cfg)
+
+        def counted(p, t, c, i):
+            traces["n"] += 1
+            return step(p, t, c, i)
+
+        jstep = jax.jit(counted)
+        lowered = jstep.lower(packed, toks, caches, pos)
+        if depth == SCAN_DEPTHS[0]:
+            # trace-count invariant: two same-shape calls, one trace
+            # (cheap at the shallow depth; the deep one only lowers)
+            lg, caches = jstep(packed, toks, caches, pos)
+            lg, caches = jstep(packed, toks, caches, jnp.asarray(1, jnp.int32))
+            jax.block_until_ready(lg)
+        out[f"packed_scan_L{depth}"] = {
+            "hlo_bytes": len(lowered.as_text()),
+            "traces": traces["n"],
+        }
+    return out
+
+
+def _measure_paged(base_cfg) -> dict:
+    cfg = base_cfg.with_(n_layers=4)
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    eng = PagedEngine(
+        cfg, params,
+        PagedServeConfig(ctx_len=64, block_size=16, max_batch=2),
+    )
+    lowered = eng._step.lower(
+        params,
+        jnp.asarray(eng.last_tok[:, None]),
+        eng.pools,
+        eng.tables,
+        jnp.asarray(eng.pos),
+        jnp.asarray(eng.active),
+        {k: jnp.asarray(v) for k, v in eng.samp.items()},
+        eng.counts,
+    )
+    # mixed lengths + churn (retire/admit) must still trace once: the
+    # decode step's shapes are lane-count-invariant by construction
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 9, 13)]
+    eng.generate(prompts, 4)
+    return {"paged_decode_step": {
+        "hlo_bytes": len(lowered.as_text()),
+        "traces": eng.stats()["decode_traces"],
+    }}
+
+
+def _measure_contiguous(base_cfg) -> dict:
+    cfg = base_cfg.with_(n_layers=4)
+    params = zoo.init_fn(cfg)(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_new_tokens=4, ctx_len=32)
+    eng = Engine(cfg, params, scfg)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 9)).astype(np.int32)
+    lanes = stack_lanes([SamplingParams()] * 2, np.arange(2, dtype=np.int32))
+    padded = pad_rows_pow2(prompts)
+    lanes = {k: pad_rows_pow2(v) for k, v in lanes.items()}
+    main, rest, rest_len = split_prompt_chunks(padded, scfg.prefill_chunk)
+    # class access keeps _generate unbound: self rides through
+    # static_argnums=0 exactly as in Engine.generate
+    lowered = Engine._generate.lower(
+        eng, jnp.asarray(main), jnp.asarray(rest),
+        jnp.asarray(rest_len, jnp.int32),
+        {k: jnp.asarray(v) for k, v in lanes.items()},
+    )
+    eng.generate(prompts)
+    eng.generate(prompts)  # same shape bucket → must NOT retrace
+    return {"contiguous_generate": {
+        "hlo_bytes": len(lowered.as_text()),
+        "traces": eng.stats()["decode_traces"],
+    }}
+
+
+def measure() -> dict:
+    base_cfg = zoo.get_smoke_config("llama7b_like")
+    programs = {}
+    programs.update(_measure_packed_scan(base_cfg))
+    programs.update(_measure_paged(base_cfg))
+    programs.update(_measure_contiguous(base_cfg))
+    lo = programs[f"packed_scan_L{SCAN_DEPTHS[0]}"]["hlo_bytes"]
+    hi = programs[f"packed_scan_L{SCAN_DEPTHS[1]}"]["hlo_bytes"]
+    return {
+        "backend": jax.default_backend(),
+        "max_scan_depth_growth": MAX_SCAN_DEPTH_GROWTH,
+        "scan_depth_growth": hi / lo,
+        "programs": programs,
+    }
+
+
+def gate(measured: dict, baseline: dict) -> int:
+    failures = []
+    warned = 0
+
+    growth = measured["scan_depth_growth"]
+    limit = baseline.get("max_scan_depth_growth", MAX_SCAN_DEPTH_GROWTH)
+    status = "ok" if growth <= limit else "FAIL"
+    print(f"[hlo] packed scan depth growth L{SCAN_DEPTHS[1]}/L{SCAN_DEPTHS[0]}"
+          f": {growth:.3f}x (limit {limit:.2f}x, {status})")
+    if growth > limit:
+        failures.append(f"scan depth growth {growth:.3f}x > {limit:.2f}x "
+                        "(packed scan HLO must be depth-independent)")
+
+    base_progs = baseline.get("programs", {})
+    for name, m in measured["programs"].items():
+        b = base_progs.get(name)
+        if b is None:
+            print(f"[hlo] {name}: no baseline entry (new program?); "
+                  "run --update-baseline")
+            failures.append(f"{name} missing from baseline")
+            continue
+        if m["traces"] != b["traces"]:
+            failures.append(
+                f"{name} traced {m['traces']}x (baseline {b['traces']}x)"
+            )
+            print(f"[hlo] {name}: traces {m['traces']} != {b['traces']} FAIL")
+        else:
+            print(f"[hlo] {name}: traces {m['traces']} ok")
+        ratio = m["hlo_bytes"] / max(b["hlo_bytes"], 1)
+        if ratio > HARD_FACTOR:
+            failures.append(f"{name} HLO {ratio:.2f}x baseline")
+            verdict = "FAIL"
+        elif ratio > WARN_FACTOR:
+            warned += 1
+            verdict = f"WARN (> {WARN_FACTOR:.1f}x, below the "\
+                      f"{HARD_FACTOR:.0f}x gate)"
+        else:
+            verdict = "ok"
+        print(f"[hlo] {name}: {b['hlo_bytes']} -> {m['hlo_bytes']} bytes "
+              f"({ratio:.2f}x, {verdict})")
+
+    if measured["backend"] != baseline.get("backend"):
+        print(f"[hlo] note: backend changed "
+              f"{baseline.get('backend')} -> {measured['backend']}; "
+              "byte budgets may drift, trace counts must not")
+    if failures:
+        print("[hlo] FAIL: " + "; ".join(failures))
+        return 1
+    print(f"[hlo] budget check passed ({warned} warn-only drift(s))")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="measure and (re)write the baseline file")
+    args = ap.parse_args(argv)
+
+    measured = measure()
+    if args.update_baseline:
+        args.baseline.write_text(json.dumps(measured, indent=2,
+                                            sort_keys=True) + "\n")
+        print(f"[hlo] baseline written to {args.baseline}")
+        return 0
+    if not args.baseline.exists():
+        print(f"[hlo] no baseline at {args.baseline}; "
+              "run with --update-baseline first")
+        return 2
+    baseline = json.loads(args.baseline.read_text())
+    return gate(measured, baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""tracelint: static analysis for compiled-path purity and serving invariants.
+
+The serving stack's correctness rests on properties that are invisible
+to pytest until they regress a perf trend: the paged decode step must
+stay ONE compiled trace, host code (clocks, numpy RNG, metrics) must
+never leak into a jitted function, Pallas kernels must keep their
+grids/BlockSpecs static, and packed bit vectors must stay {4, 8, 16}
+group schedules. ``tracelint`` machine-checks these on every commit:
+
+- :mod:`repro.analysis.project` parses the repo into a project model
+  and grows a call graph seeded at jit boundaries (``jax.jit``,
+  ``lax.scan``/``cond``/``while_loop`` bodies, ``pl.pallas_call``
+  kernels, the serving engines' step closures);
+- :mod:`repro.analysis.purity` lints everything reachable from a
+  boundary for host effects (rule pack ``purity-*``);
+- :mod:`repro.analysis.pallas_rules` checks kernel call sites
+  (``pallas-*``);
+- :mod:`repro.analysis.conventions` enforces repo-wide conventions
+  (``conv-*``): seeded local RNGs, host clocks confined to
+  ``launch/``/``benchmarks/`` and the injectable ``serve.metrics``
+  Clock, bench metric suffixes that ``scripts/check_bench.py`` can
+  gate, packed bit literals.
+
+Run it as ``python -m repro.analysis.cli src tests benchmarks``;
+suppress an intentional finding with
+``# tracelint: allow[rule-id] -- reason`` (the reason is mandatory).
+``scripts/hlo_budget.py`` is the companion compile-time gate: it lowers
+the canonical serving programs and asserts trace counts and HLO-size
+budgets against the committed ``HLO_BUDGET.json``.
+"""
+from repro.analysis.core import Finding, Rule, RULES
+from repro.analysis.runner import lint_paths, lint_sources
+
+__all__ = ["Finding", "Rule", "RULES", "lint_paths", "lint_sources"]

@@ -1,0 +1,89 @@
+"""tracelint CLI.
+
+  python -m repro.analysis.cli [paths...]          # default: src tests benchmarks
+  python -m repro.analysis.cli --explain purity-host-time
+  python -m repro.analysis.cli --list-rules
+  python -m repro.analysis.cli --json src
+
+Exit codes: 0 = clean (every finding suppressed with a reason),
+1 = unsuppressed findings, 2 = usage error. Suppress an intentional
+finding inline with ``# tracelint: allow[rule-id] -- reason`` (on the
+offending line, or on its own line directly above).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.core import RULES, explain
+from repro.analysis.runner import lint_paths, render_json, render_text
+
+__all__ = ["main"]
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def _list_rules() -> str:
+    width = max(len(r) for r in RULES)
+    lines = []
+    for rid, rule in sorted(RULES.items(), key=lambda kv: (kv[1].pack, kv[0])):
+        lines.append(f"{rid:<{width}}  [{rule.pack}] {rule.summary}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.cli",
+        description="tracelint: compiled-path purity & serving-invariant "
+        "static analyzer",
+    )
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         "(default: src tests benchmarks)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON instead of text")
+    ap.add_argument("--explain", metavar="RULE_ID",
+                    help="print the long-form rationale for one rule and exit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list every rule id and exit")
+    ap.add_argument("--rules", metavar="ID[,ID...]",
+                    help="only run the named rules (comma-separated)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by allow[...] comments")
+    ap.add_argument("--root", default=None,
+                    help="repo root the paths are relative to (default: cwd)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+    if args.explain:
+        text = explain(args.explain)
+        if text is None:
+            print(f"unknown rule id {args.explain!r}; try --list-rules",
+                  file=sys.stderr)
+            return 2
+        print(text)
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}; "
+                  "try --list-rules", file=sys.stderr)
+            return 2
+
+    findings = lint_paths(args.paths, root=args.root, rules=rules)
+    if args.json:
+        print(render_json(findings))
+    else:
+        print(render_text(findings, show_suppressed=args.show_suppressed))
+    active = [f for f in findings if not f.suppressed]
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

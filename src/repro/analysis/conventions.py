@@ -1,0 +1,285 @@
+"""Rule pack ``conv-*``: repo conventions checked module-wide.
+
+Path-scoped (unlike the purity pack, which follows the call graph):
+
+- randomness: no global-state numpy RNG anywhere; generators are local
+  and seeded; test files keep them inside the test function;
+- host clocks confined to ``launch/``, ``benchmarks/``, ``scripts/``,
+  ``examples/``, and the one injectable Clock home
+  (``repro.serve.metrics``);
+- bench metric keys must carry suffixes ``scripts/check_bench.py`` can
+  classify (near-miss spellings silently lose their CI gate);
+- packed bit-width literals stay inside {4, 8, 16}.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import Finding
+from repro.analysis.project import ModuleInfo, Project, attr_chain, resolved_dotted
+
+__all__ = ["check_module", "HIGHER_IS_BETTER_SUFFIXES",
+           "LOWER_IS_BETTER_SUFFIXES", "WARN_ONLY_SUFFIXES", "PACKED_BITS"]
+
+# -- randomness --------------------------------------------------------------
+
+# module-global numpy RNG entry points (state shared across the process)
+_GLOBAL_DRAWS = frozenset(
+    {"seed", "random", "rand", "randn", "randint", "random_sample",
+     "normal", "uniform", "choice", "permutation", "shuffle", "exponential",
+     "poisson", "binomial", "beta", "gamma", "standard_normal", "bytes",
+     "get_state", "set_state"}
+)
+
+# -- clocks ------------------------------------------------------------------
+
+_CLOCK_ZONES = ("benchmarks", "scripts", "examples")
+_CLOCK_MODULE_PREFIXES = ("repro.launch",)
+_CLOCK_HOME = "repro.serve.metrics"  # the injectable Clock lives here
+
+# -- bench metric suffixes (MUST mirror scripts/check_bench.py; the
+# cross-check lives in tests/test_check_bench.py) ---------------------------
+
+HIGHER_IS_BETTER_SUFFIXES = ("_tok_per_s",)
+LOWER_IS_BETTER_SUFFIXES = ("_trace_s", "_ms_p50", "_ms_p90", "_ms_p99",
+                            "_wait_ms", "_ms_mean")
+WARN_ONLY_SUFFIXES = ("_hlo_bytes", "_trace_s", "_ms_p50", "_ms_p90",
+                      "_ms_p99", "_wait_ms", "_ms_mean")
+_KNOWN_SUFFIXES = HIGHER_IS_BETTER_SUFFIXES + LOWER_IS_BETTER_SUFFIXES + \
+    WARN_ONLY_SUFFIXES
+
+# spellings that LOOK like a gated metric but classify as informational
+_NEAR_MISS = (
+    (re.compile(r"_per_sec(ond)?s?$"), "_tok_per_s"),
+    (re.compile(r"_toks?_s$"), "_tok_per_s"),
+    (re.compile(r"_tok_per_sec$"), "_tok_per_s"),
+    (re.compile(r"_tokps$"), "_tok_per_s"),
+    (re.compile(r"(?<!_ms)_p(50|90|99)$"), "_ms_p50/_ms_p90/_ms_p99"),
+    (re.compile(r"_sec(ond)?s$"), "_trace_s (or report ms percentiles)"),
+    (re.compile(r"_msec$|_millis$"), "_ms_p50/_ms_p90/_ms_p99/_ms_mean"),
+    (re.compile(r"(?<!_hlo)(?<!bytes)_byte$"), "*bytes*"),
+)
+# keys ending bare `_ms` (not one of the known ms families) lose gating too
+_BARE_MS = re.compile(r"_ms$")
+_MS_FAMILIES = ("_wait_ms",)
+
+# -- bits --------------------------------------------------------------------
+
+PACKED_BITS = frozenset({4, 8, 16})
+
+
+def _is_test_path(path: str) -> bool:
+    name = path.rsplit("/", 1)[-1]
+    return path.startswith("tests/") or name.startswith("test_")
+
+
+def _clock_allowed(mod: ModuleInfo) -> bool:
+    if mod.zone() in _CLOCK_ZONES:
+        return True
+    if mod.modname == _CLOCK_HOME:
+        return True
+    return any(mod.modname.startswith(p) for p in _CLOCK_MODULE_PREFIXES)
+
+
+def _check_random(mod: ModuleInfo) -> list[Finding]:
+    findings = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        scope = mod.scope_of.get(id(node))
+        d = resolved_dotted(node.func, mod, scope)
+        if d is None or not d.startswith("numpy.random."):
+            continue
+        leaf = d.rsplit(".", 1)[-1]
+        if leaf in _GLOBAL_DRAWS and d == f"numpy.random.{leaf}":
+            what = ("seeds" if leaf == "seed" else "draws from")
+            findings.append(
+                Finding(
+                    "conv-global-random",
+                    mod.path,
+                    node.lineno,
+                    f"`{d}()` {what} the process-global numpy RNG; use a "
+                    "local seeded `np.random.default_rng(seed)`",
+                )
+            )
+        if leaf == "default_rng":
+            seeded = bool(node.args) or any(
+                kw.arg == "seed" for kw in node.keywords
+            )
+            if not seeded:
+                findings.append(
+                    Finding(
+                        "conv-unseeded-rng",
+                        mod.path,
+                        node.lineno,
+                        "`default_rng()` without a seed is unreproducible; "
+                        "pass an explicit seed",
+                    )
+                )
+            if scope is None and _is_test_path(mod.path):
+                findings.append(
+                    Finding(
+                        "conv-module-rng",
+                        mod.path,
+                        node.lineno,
+                        "module-level RNG in a test file couples tests "
+                        "through shared state; create `default_rng(seed)` "
+                        "inside each test",
+                    )
+                )
+    return findings
+
+
+def _check_clocks(mod: ModuleInfo) -> list[Finding]:
+    if _clock_allowed(mod):
+        return []
+    findings = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = resolved_dotted(node.func, mod, mod.scope_of.get(id(node)))
+        if d is None or not (d == "time" or d.startswith("time.")):
+            continue
+        findings.append(
+            Finding(
+                "conv-host-clock",
+                mod.path,
+                node.lineno,
+                f"`{d}()` outside launch/ and benchmarks/: engine and "
+                "library code must take an injectable "
+                "`repro.serve.metrics.Clock` so tests can fake time",
+            )
+        )
+    return findings
+
+
+def _metric_keys(mod: ModuleInfo):
+    """String keys written into dict literals / subscript stores in a
+    benchmarks module — the population check_bench.py will classify."""
+    for node in ast.walk(mod.tree):
+        keys = []
+        if isinstance(node, ast.Dict):
+            keys = node.keys
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    keys.append(t.slice)
+        for k in keys:
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                yield k.value, k.lineno
+            elif isinstance(k, ast.JoinedStr) and k.values:
+                last = k.values[-1]
+                if isinstance(last, ast.Constant) and isinstance(last.value, str):
+                    # f"L{d}_{mode}_hlo_bytes" → classify by the literal tail
+                    yield last.value, k.lineno
+
+
+def _check_metric_suffixes(mod: ModuleInfo) -> list[Finding]:
+    if mod.zone() != "benchmarks":
+        return []
+    findings = []
+    for key, line in _metric_keys(mod):
+        if key.endswith(_KNOWN_SUFFIXES) or "bytes" in key:
+            continue
+        hint = None
+        for pat, want in _NEAR_MISS:
+            if pat.search(key):
+                hint = want
+                break
+        if hint is None and _BARE_MS.search(key) and not key.endswith(
+            _MS_FAMILIES
+        ):
+            hint = "_ms_p50/_ms_p90/_ms_p99/_ms_mean/_wait_ms"
+        if hint is not None:
+            findings.append(
+                Finding(
+                    "conv-bench-metric-suffix",
+                    mod.path,
+                    line,
+                    f"metric key `{key}` is a near-miss of the "
+                    f"check_bench.py suffix contract — it would be "
+                    f"classified informational and never gated; use a key "
+                    f"ending `{hint}`",
+                )
+            )
+    return findings
+
+
+def _bit_literals(expr):
+    """Integer literals that denote bit widths inside ``expr``."""
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int) \
+            and not isinstance(expr.value, bool):
+        yield expr
+    elif isinstance(expr, (ast.List, ast.Tuple, ast.Set)):
+        for e in expr.elts:
+            yield from _bit_literals(e)
+    elif isinstance(expr, ast.IfExp):
+        yield from _bit_literals(expr.body)
+        yield from _bit_literals(expr.orelse)
+    elif isinstance(expr, (ast.ListComp, ast.GeneratorExp)):
+        yield from _bit_literals(expr.elt)
+    elif isinstance(expr, ast.Call):
+        chain = attr_chain(expr.func)
+        leaf = chain[-1] if chain else ""
+        if leaf == "full" and len(expr.args) >= 2:
+            yield from _bit_literals(expr.args[1])
+        elif leaf in ("asarray", "array") and expr.args:
+            yield from _bit_literals(expr.args[0])
+    elif isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Mult):
+        for side in (expr.left, expr.right):  # [4] * n / n * [8]
+            if isinstance(side, (ast.List, ast.Tuple)):
+                yield from _bit_literals(side)
+
+
+def _is_bits_name(target) -> bool:
+    if isinstance(target, ast.Name):
+        return "bits" in target.id.lower()
+    if isinstance(target, ast.Subscript):
+        return _is_bits_name(target.value)
+    return False
+
+
+def _check_bit_literals(mod: ModuleInfo) -> list[Finding]:
+    findings = []
+
+    def check_expr(expr, line_fallback):
+        for lit in _bit_literals(expr):
+            if lit.value not in PACKED_BITS:
+                findings.append(
+                    Finding(
+                        "conv-bit-literal",
+                        mod.path,
+                        getattr(lit, "lineno", line_fallback),
+                        f"bit width {lit.value} outside the packed set "
+                        "{4, 8, 16} (nf4 / int8 / dense stack)",
+                    )
+                )
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "bits":
+                    check_expr(kw.value, node.lineno)
+        elif isinstance(node, ast.Assign):
+            if any(_is_bits_name(t) for t in node.targets):
+                # whole-vector literals and sliced stores (`bits[:k] = 8`);
+                # scalar name assignments (`total_bits = 32`) are skipped —
+                # only container/slice contexts denote width vectors
+                is_slice_store = any(
+                    isinstance(t, ast.Subscript) for t in node.targets
+                )
+                if is_slice_store:
+                    check_expr(node.value, node.lineno)
+                elif not (isinstance(node.value, ast.Constant)):
+                    check_expr(node.value, node.lineno)
+    return findings
+
+
+def check_module(mod: ModuleInfo, proj: Project) -> list[Finding]:
+    findings = []
+    findings += _check_random(mod)
+    findings += _check_clocks(mod)
+    findings += _check_metric_suffixes(mod)
+    findings += _check_bit_literals(mod)
+    return findings

@@ -1,0 +1,323 @@
+"""Rule registry, findings, and inline-suppression parsing for tracelint."""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Optional
+
+__all__ = ["Rule", "Finding", "RULES", "Suppression", "parse_suppressions"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    pack: str  # "purity" | "pallas" | "conventions" | "lint"
+    summary: str
+    explain: str  # long-form text shown by ``--explain``
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str  # repo-relative display path
+    line: int
+    message: str
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        tag = f" (suppressed: {self.suppress_reason})" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}{tag}"
+
+
+_RULES = [
+    Rule(
+        "purity-host-time",
+        "purity",
+        "host clock call reachable from a jit boundary",
+        "A `time.*` call (time/monotonic/perf_counter/sleep/...) was found\n"
+        "in a function reachable from a compiled-trace boundary (jax.jit,\n"
+        "a lax.scan/cond/while body, or a Pallas kernel). The Python body\n"
+        "of a jitted function runs ONCE per compiled shape, so the clock\n"
+        "reads trace time, not run time — and worse, it silently bakes a\n"
+        "constant into the compiled program. Wall timing belongs on the\n"
+        "host side, around the jitted call: use the injectable\n"
+        "`repro.serve.metrics.Clock` near engine code, or plain `time.*`\n"
+        "inside `launch/` and `benchmarks/`.",
+    ),
+    Rule(
+        "purity-np-random",
+        "purity",
+        "numpy RNG call reachable from a jit boundary",
+        "`np.random.*` runs at trace time: the drawn value is frozen into\n"
+        "the compiled program, so every execution reuses the same\n"
+        "'random' constant and retraces re-draw it — results change with\n"
+        "compilation order. On a compiled path randomness must flow\n"
+        "through `jax.random` keys (this repo's serving engines use\n"
+        "counter-based `fold_in(fold_in(key, rid), position)` streams so\n"
+        "draws are batch- and admission-order-invariant).",
+    ),
+    Rule(
+        "purity-tracer-leak",
+        "purity",
+        "tracer concretized on the compiled path",
+        "`.item()`, `float()`, `int()`, `bool()`, or `np.asarray()` on a\n"
+        "traced value forces a concrete result mid-trace. Under `jit`\n"
+        "this raises `ConcretizationTypeError` at best; in shape-dependent\n"
+        "corners it silently freezes a traced value into a compile-time\n"
+        "constant. Keep values as jax arrays until after the jitted call\n"
+        "returns to the host.",
+    ),
+    Rule(
+        "purity-python-branch",
+        "purity",
+        "Python control flow on a traced value",
+        "An `if`/`while`/`assert` whose condition involves a traced array\n"
+        "either fails to trace or, when it concretizes, bakes ONE branch\n"
+        "into the compiled program — the other branch is gone for every\n"
+        "later call. Use `jax.lax.cond` / `jax.lax.while_loop` /\n"
+        "`jnp.where` instead (static properties like `.shape`, `.ndim`,\n"
+        "`.dtype` are fine to branch on and are not flagged).",
+    ),
+    Rule(
+        "purity-state-mutation",
+        "purity",
+        "Python state mutated on the compiled path",
+        "Assigning to `self.attr` / `obj.attr`, declaring\n"
+        "`global`/`nonlocal`, or mutating a closed-over container\n"
+        "(`.append`/`.update`/...) inside a compiled function runs once\n"
+        "per TRACE, not once per call — the classic silent bug behind\n"
+        "counters that only count compilations. This repo keeps exactly\n"
+        "that idiom on purpose for its `decode_traces`-style trace\n"
+        "counters; those carry a reasoned\n"
+        "`# tracelint: allow[purity-state-mutation]`. Anything else\n"
+        "should carry state through the function's arguments/returns.",
+    ),
+    Rule(
+        "purity-metrics-call",
+        "purity",
+        "serve.metrics call reachable from a jit boundary",
+        "The telemetry layer (`repro.serve.metrics`) is host-side BY\n"
+        "CONTRACT: engines stamp lifecycle events and gauges around the\n"
+        "jitted calls, never inside them, so metrics-on decode stays\n"
+        "bit-identical to metrics-off and `decode_traces` stays 1 (the\n"
+        "PR 6 invariant, regression-tested in\n"
+        "tests/test_continuous_batching.py). A metrics call on the\n"
+        "compiled path would fire once per trace and desynchronize the\n"
+        "registry from real execution. Move it outside the jitted\n"
+        "function.",
+    ),
+    Rule(
+        "pallas-ref-params",
+        "pallas",
+        "Pallas kernel parameter not used as a Ref",
+        "Parameters of a `pl.pallas_call` kernel are memory Refs: loads\n"
+        "and stores go through `ref[...]` indexing (or shape-only helpers\n"
+        "like `jnp.zeros_like(ref)`). Using a ref directly as an\n"
+        "arithmetic operand, calling it, or returning a value from the\n"
+        "kernel body indicates the kernel treats refs as arrays — Pallas\n"
+        "kernels communicate results ONLY by storing into output refs.",
+    ),
+    Rule(
+        "pallas-static-grid",
+        "pallas",
+        "Pallas grid/BlockSpec/scratch shape is not static",
+        "The `grid`, every `pl.BlockSpec` block shape, and every\n"
+        "`scratch_shapes` entry must be Python-static at trace time: they\n"
+        "fix the compiled kernel's iteration space and VMEM layout. An\n"
+        "expression involving a traced value here retraces per shape at\n"
+        "best and fails to lower at worst. Derive sizes from `.shape`\n"
+        "attributes (static) or config, never from array values.",
+    ),
+    Rule(
+        "pallas-pure-index-map",
+        "pallas",
+        "Pallas BlockSpec index map is not pure arithmetic",
+        "BlockSpec index maps run for every grid step to compute block\n"
+        "coordinates; they must be pure functions of the grid indices and\n"
+        "scalar-prefetch operands (subscripts and arithmetic only — e.g.\n"
+        "`lambda b, i, t, c: (t[b, i], 0, 0, 0)` routes through a\n"
+        "prefetched block table). Calling into other functions, clocks,\n"
+        "or RNGs from an index map makes block routing untraceable and\n"
+        "non-reproducible.",
+    ),
+    Rule(
+        "conv-global-random",
+        "conventions",
+        "global-state numpy randomness",
+        "`np.random.seed(...)` and draws through the module-global\n"
+        "generator (`np.random.normal(...)`, `np.random.randint(...)`,\n"
+        "...) create spooky cross-test/cross-module coupling: any import\n"
+        "that touches the global stream reorders every later draw. Repo\n"
+        "convention (PR 4): randomness is a LOCAL seeded generator —\n"
+        "`rng = np.random.default_rng(seed)` — created where it is used.",
+    ),
+    Rule(
+        "conv-module-rng",
+        "conventions",
+        "module-level RNG in a test file",
+        "A `np.random.default_rng` created at module scope in a test file\n"
+        "is shared mutable state across tests: test outcomes start\n"
+        "depending on collection order. Create the generator inside each\n"
+        "test (repo convention: local `default_rng(seed)` per test).",
+    ),
+    Rule(
+        "conv-unseeded-rng",
+        "conventions",
+        "unseeded numpy Generator",
+        "`np.random.default_rng()` with no seed draws from OS entropy —\n"
+        "the run is unreproducible, which breaks this repo's\n"
+        "bit-exactness discipline (oracle parity tests, seeded load\n"
+        "harness, counter-based sampling). Pass an explicit seed.",
+    ),
+    Rule(
+        "conv-host-clock",
+        "conventions",
+        "host clock outside launch/, benchmarks/, or the metrics Clock",
+        "Wall-clock reads (`time.time`/`monotonic`/`perf_counter`/...)\n"
+        "are confined to `launch/` scripts, `benchmarks/`, and the ONE\n"
+        "injectable clock abstraction (`repro.serve.metrics.Clock` /\n"
+        "`MonotonicClock`). Engine and library code must take a `Clock`\n"
+        "(or a `ServeMetrics`) so tests can fake time deterministically —\n"
+        "a stray `time.time()` near engine code is untestable latency\n"
+        "accounting.",
+    ),
+    Rule(
+        "conv-bench-metric-suffix",
+        "conventions",
+        "bench metric key does not match check_bench.py suffix semantics",
+        "`scripts/check_bench.py` derives gating direction from metric\n"
+        "key SUFFIXES: `*_tok_per_s` (higher is better, hard-gated),\n"
+        "`*bytes*` (lower, hard-gated), `*_trace_s`/`*_hlo_bytes`/\n"
+        "`*_ms_p50|p90|p99`/`*_wait_ms`/`*_ms_mean` (trend-only). A\n"
+        "near-miss spelling (`_per_sec`, `_toks_s`, `_p50` without the\n"
+        "`_ms` family, `_secs`, ...) silently classifies the metric as\n"
+        "informational and the CI gate never fires. Rename the key to a\n"
+        "recognized suffix.",
+    ),
+    Rule(
+        "conv-bit-literal",
+        "conventions",
+        "packed bit width outside {4, 8, 16}",
+        "Packed mixed-precision execution (grouped PackedStacks, the\n"
+        "fused nf4/int8 kernels, `group_schedule`) is defined exactly for\n"
+        "bit widths 4 (nf4), 8 (int8), and 16 (dense stack). A literal\n"
+        "bit vector containing anything else will either fail packing or\n"
+        "silently fall back to an unintended precision. Tests that\n"
+        "deliberately feed invalid widths to assert the error path should\n"
+        "carry a reasoned suppression.",
+    ),
+    Rule(
+        "lint-bare-allow",
+        "lint",
+        "suppression without a reason",
+        "`# tracelint: allow[rule-id]` must say WHY:\n"
+        "`# tracelint: allow[rule-id] -- reason`. The repo lints clean\n"
+        "with zero unexplained findings; a bare allow is an unexplained\n"
+        "finding wearing a trenchcoat.",
+    ),
+    Rule(
+        "lint-unknown-rule",
+        "lint",
+        "suppression names an unknown rule id",
+        "The rule id inside `# tracelint: allow[...]` does not exist —\n"
+        "probably a typo, which means the suppression is dead and the\n"
+        "finding it meant to cover will still fail CI. See\n"
+        "`python -m repro.analysis.cli --list-rules`.",
+    ),
+]
+
+RULES: dict[str, Rule] = {r.id: r for r in _RULES}
+
+
+# -- inline suppressions -----------------------------------------------------
+
+_ALLOW_RE = re.compile(
+    r"#\s*tracelint:\s*allow\[([A-Za-z0-9_,\-\s]*)\]\s*(?:--\s*(\S.*))?"
+)
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int  # line the comment sits on
+    rules: tuple[str, ...]
+    reason: str
+    standalone: bool  # comment-only line → also covers the next line
+
+    def covers(self, line: int) -> bool:
+        if line == self.line:
+            return True
+        return self.standalone and line == self.line + 1
+
+
+def parse_suppressions(
+    source: str, path: str
+) -> tuple[list[Suppression], list[Finding]]:
+    """Extract ``# tracelint: allow[...]`` comments → (suppressions,
+    findings for malformed ones)."""
+    sups: list[Suppression] = []
+    findings: list[Finding] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [t for t in tokens if t.type == tokenize.COMMENT]
+    except tokenize.TokenError:
+        return sups, findings
+    for tok in comments:
+        m = _ALLOW_RE.search(tok.string)
+        if not m:
+            continue
+        line = tok.start[0]
+        ids = tuple(s.strip() for s in m.group(1).split(",") if s.strip())
+        reason = (m.group(2) or "").strip()
+        standalone = tok.line[: tok.start[1]].strip() == ""
+        if not reason:
+            findings.append(
+                Finding(
+                    "lint-bare-allow",
+                    path,
+                    line,
+                    "suppression has no reason; write "
+                    "`# tracelint: allow[rule-id] -- why this is intentional`",
+                )
+            )
+            continue
+        unknown = [i for i in ids if i not in RULES]
+        for u in unknown:
+            findings.append(
+                Finding(
+                    "lint-unknown-rule",
+                    path,
+                    line,
+                    f"suppression names unknown rule id {u!r}",
+                )
+            )
+        known = tuple(i for i in ids if i in RULES)
+        if known:
+            sups.append(Suppression(line, known, reason, standalone))
+    return sups, findings
+
+
+def apply_suppressions(
+    findings: list[Finding], sups: list[Suppression]
+) -> None:
+    """Mark findings covered by a matching suppression (in place)."""
+    for f in findings:
+        if f.rule.startswith("lint-"):
+            continue  # meta findings are never suppressible
+        for s in sups:
+            if f.rule in s.rules and s.covers(f.line):
+                f.suppressed = True
+                f.suppress_reason = s.reason
+                break
+
+
+def explain(rule_id: str) -> Optional[str]:
+    r = RULES.get(rule_id)
+    if r is None:
+        return None
+    return f"{r.id} [{r.pack}] — {r.summary}\n\n{r.explain}"

@@ -1,0 +1,225 @@
+"""Rule pack ``pallas-*``: invariants at ``pl.pallas_call`` sites.
+
+Checked per call site: the resolved kernel function must treat its
+positional parameters as Refs (loads/stores via ``ref[...]``, results
+only through output refs), the ``grid`` / BlockSpec block shapes /
+``scratch_shapes`` must be static expressions, and BlockSpec index maps
+must be pure arithmetic over grid indices and scalar-prefetch operands.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding
+from repro.analysis.project import (
+    FunctionInfo,
+    ModuleInfo,
+    Project,
+    attr_chain,
+    infer_tracers,
+    own_nodes,
+    resolve_callable,
+    resolved_dotted,
+    uses_tracer,
+)
+
+__all__ = ["check_module"]
+
+# calls an index map may legitimately make (pure arithmetic helpers)
+_INDEX_MAP_CALLS = frozenset({"min", "max", "abs", "divmod", "cdiv",
+                              "multiple_of", "num_programs", "program_id"})
+# shape-only helpers a kernel may hand a ref to without loading it
+_SHAPE_ONLY_CALLS = frozenset({"zeros_like", "ones_like", "full_like",
+                               "empty_like", "when"})
+
+
+def _lookup_assign(name: str, scope, mod: ModuleInfo):
+    s = scope
+    while s is not None:
+        v = mod.assigns.get((id(s.node), name))
+        if v is not None:
+            return v
+        s = s.parent
+    return mod.assigns.get((None, name))
+
+
+def _expand_exprs(site: ast.Call, scope, mod: ModuleInfo) -> list:
+    """The call-site subtree plus the assignment values of every name it
+    references (specs are often built a few lines above the call:
+    ``spec = pl.BlockSpec(...); pl.pallas_call(k, in_specs=[spec])``)."""
+    seen_names: set = set()
+    exprs = [site]
+    queue = [site]
+    while queue:
+        e = queue.pop()
+        for sub in ast.walk(e):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                    and sub.id not in seen_names:
+                seen_names.add(sub.id)
+                v = _lookup_assign(sub.id, scope, mod)
+                if v is not None:
+                    exprs.append(v)
+                    queue.append(v)
+    return exprs
+
+
+def _pallas_call_sites(mod: ModuleInfo):
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = resolved_dotted(node.func, mod, mod.scope_of.get(id(node)))
+        chain = attr_chain(node.func)
+        if (d is not None and d.endswith(".pallas_call")) or (
+            chain and chain[-1] == "pallas_call"
+        ):
+            yield node
+
+
+def _iter_blockspecs(site: ast.Call, mod: ModuleInfo):
+    """Every ``pl.BlockSpec(...)`` call in the site's argument subtree
+    (covers in_specs/out_specs and nested *GridSpec constructors)."""
+    for sub in ast.walk(site):
+        if not isinstance(sub, ast.Call):
+            continue
+        chain = attr_chain(sub.func)
+        if chain and chain[-1] == "BlockSpec":
+            yield sub
+
+
+def _grid_and_scratch_exprs(site: ast.Call):
+    """``grid=`` / ``scratch_shapes=`` expressions of the site and of
+    any GridSpec constructor nested in its arguments."""
+    for sub in ast.walk(site):
+        if not isinstance(sub, ast.Call):
+            continue
+        chain = attr_chain(sub.func)
+        is_spec = chain and (
+            chain[-1] == "pallas_call" or chain[-1].endswith("GridSpec")
+        )
+        if not is_spec:
+            continue
+        for kw in sub.keywords:
+            if kw.arg in ("grid", "scratch_shapes", "num_scalar_prefetch"):
+                yield kw.arg, kw.value
+
+
+def _check_kernel(kernel: FunctionInfo, site_line: int) -> list[Finding]:
+    findings: list[Finding] = []
+    mod = kernel.module
+    # positional params are refs; keyword-only ones are partial-bound
+    # compile constants
+    refs = set(kernel.param_names()) - {"self", "cls"}
+    if kernel.node.args.vararg:
+        refs.add(kernel.node.args.vararg.arg)
+
+    def add(node, msg):
+        findings.append(Finding("pallas-ref-params", mod.path, node.lineno,
+                                msg))
+
+    for node in own_nodes(kernel.node):
+        if isinstance(node, ast.Return) and node.value is not None:
+            if not (isinstance(node.value, ast.Constant)
+                    and node.value.value is None):
+                add(node,
+                    f"kernel `{kernel.name}` returns a value; Pallas kernels "
+                    "communicate only by storing into output refs "
+                    f"(pallas_call at line {site_line})")
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in refs:
+            add(node,
+                f"kernel `{kernel.name}` calls its ref parameter "
+                f"`{node.func.id}` — refs are memory handles, not callables")
+        if isinstance(node, (ast.BinOp, ast.Compare)):
+            operands = []
+            if isinstance(node, ast.BinOp):
+                operands = [node.left, node.right]
+            else:
+                operands = [node.left] + list(node.comparators)
+            for op in operands:
+                if isinstance(op, ast.Name) and op.id in refs:
+                    add(node,
+                        f"kernel `{kernel.name}` uses ref `{op.id}` directly "
+                        "as an arithmetic operand; load it first with "
+                        f"`{op.id}[...]`")
+    return findings
+
+
+def _check_index_map(lam: ast.Lambda, mod: ModuleInfo) -> list[Finding]:
+    findings = []
+    for node in ast.walk(lam.body):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        name = chain[-1] if chain else "<expr>"
+        if name in _INDEX_MAP_CALLS:
+            continue
+        findings.append(
+            Finding(
+                "pallas-pure-index-map",
+                mod.path,
+                node.lineno,
+                f"BlockSpec index map calls `{'.'.join(chain) if chain else name}"
+                "(...)`; index maps must be pure arithmetic over grid "
+                "indices and prefetched scalars",
+            )
+        )
+    return findings
+
+
+def check_module(mod: ModuleInfo, proj: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for site in _pallas_call_sites(mod):
+        scope = mod.scope_of.get(id(site))
+        tracers = infer_tracers(scope) if scope is not None else set()
+        roots = _expand_exprs(site, scope, mod)
+
+        # (a) kernel params are refs
+        if site.args:
+            for kernel in resolve_callable(site.args[0], scope, mod, proj):
+                if isinstance(kernel.node, ast.Lambda):
+                    continue
+                findings += _check_kernel(kernel, site.lineno)
+
+        # (b) static grid / block shapes / scratch
+        for root in roots:
+            for what, expr in _grid_and_scratch_exprs(root):
+                name = uses_tracer(expr, tracers, mod)
+                if name is not None:
+                    findings.append(
+                        Finding(
+                            "pallas-static-grid",
+                            mod.path,
+                            expr.lineno,
+                            f"`{what}` depends on traced value `{name}`; "
+                            "grids and scratch shapes must be static "
+                            "(derive from `.shape` or config)",
+                        )
+                    )
+        for spec in (s for root in roots
+                     for s in _iter_blockspecs(root, mod)):
+            shape_expr = None
+            index_map = None
+            if spec.args:
+                shape_expr = spec.args[0]
+            if len(spec.args) > 1:
+                index_map = spec.args[1]
+            for kw in spec.keywords:
+                if kw.arg == "block_shape":
+                    shape_expr = kw.value
+                elif kw.arg == "index_map":
+                    index_map = kw.value
+            if shape_expr is not None:
+                name = uses_tracer(shape_expr, tracers, mod)
+                if name is not None:
+                    findings.append(
+                        Finding(
+                            "pallas-static-grid",
+                            mod.path,
+                            shape_expr.lineno,
+                            f"BlockSpec block shape depends on traced value "
+                            f"`{name}`; block shapes must be static",
+                        )
+                    )
+            if isinstance(index_map, ast.Lambda):
+                findings += _check_index_map(index_map, mod)
+    return findings

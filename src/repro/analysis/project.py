@@ -1,0 +1,722 @@
+"""Project model: ASTs, symbol tables, and the compiled-path call graph.
+
+The call graph is seeded at *jit boundaries* — the syntactic places
+where a Python function becomes a compiled trace:
+
+- ``jax.jit(f)`` / ``jax.pmap(f)`` call sites and ``@jax.jit`` /
+  ``@functools.partial(jax.jit, ...)`` decorators;
+- ``jax.lax.scan|cond|while_loop|fori_loop|switch|map`` body functions;
+- ``pl.pallas_call(kernel, ...)`` kernel functions (kind ``pallas``);
+
+and then grown through project-local call edges: a direct call, a
+closure name assigned from a *factory* call (``pstep =
+zoo.paged_step_fn(cfg)`` → the lambda the factory returns), an instance
+attribute bound in ``__init__`` (``self._step = jax.jit(_step)``), or a
+``self.method(...)`` call. Factories themselves are NOT marked
+compiled — they run at host time — only what their ``return``
+statements resolve to. Everything reachable is handed to the purity
+rule pack.
+
+Tracer inference is deliberately conservative (precision over recall):
+the *parameters* of a direct boundary root are tracers (minus
+``static_argnums``/keyword-only Pallas compile constants), and any name
+assigned from a ``jax.*`` call or arithmetic over tracers is a tracer.
+Reads of static attributes (``.shape``/``.ndim``/``.dtype``/...) do not
+propagate tracer-ness.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional, Union
+
+__all__ = [
+    "FunctionInfo",
+    "ModuleInfo",
+    "Project",
+    "build_project",
+    "attr_chain",
+    "resolved_dotted",
+    "own_nodes",
+    "infer_tracers",
+    "uses_tracer",
+    "STATIC_ATTRS",
+]
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+PROJECT_ROOT_PKG = "repro"
+
+# wrappers that pass their first argument through as the real callable
+TRANSPARENT_WRAPPERS = (
+    "jax.jit",
+    "jax.pmap",
+    "jax.vmap",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.named_call",
+    "functools.partial",
+)
+
+JIT_WRAPPERS = ("jax.jit", "jax.pmap")
+
+# control-flow primitives whose N-th positional args are traced bodies
+CONTROL_BODY_ARGS = {
+    "jax.lax.scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.map": (0,),
+    "jax.lax.associative_scan": (0,),
+    "jax.lax.switch": (1, 2, 3, 4, 5, 6, 7),  # branches: arg 1..n
+}
+
+# attribute reads that stay static under tracing
+STATIC_ATTRS = frozenset(
+    {"shape", "ndim", "dtype", "size", "itemsize", "nbytes", "sharding",
+     "aval", "weak_type"}
+)
+
+# builtins whose result on a tracer argument is static / host-safe
+STATIC_CONSUMERS = frozenset({"len", "isinstance", "type", "getattr",
+                              "hasattr", "id", "repr", "str"})
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str
+    module: "ModuleInfo"
+    node: FuncNode
+    parent: Optional["FunctionInfo"]
+    cls: Optional[str]  # enclosing class name, if a method
+    nested: list = dataclasses.field(default_factory=list)
+    boundary_kinds: dict = dataclasses.field(default_factory=dict)  # kind→line
+    static_params: set = dataclasses.field(default_factory=set)
+    reachable: bool = False
+    via: str = ""  # provenance of reachability, for messages
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+    def param_names(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    def kwonly_names(self) -> list[str]:
+        return [p.arg for p in self.node.args.kwonlyargs]
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str  # repo-relative display path (posix)
+    modname: str  # dotted module name ("repro.serve.scheduler" / "test_x")
+    source: str
+    tree: ast.Module
+    functions: list[FunctionInfo] = dataclasses.field(default_factory=list)
+    by_node: dict = dataclasses.field(default_factory=dict)  # id(node)→FunctionInfo
+    imports: dict = dataclasses.field(default_factory=dict)  # alias→dotted
+    parents: dict = dataclasses.field(default_factory=dict)  # id(node)→node
+    scope_of: dict = dataclasses.field(default_factory=dict)  # id(node)→FunctionInfo|None
+    # per-scope simple-assignment map: (id(scope-node-or-None), name)→value expr
+    assigns: dict = dataclasses.field(default_factory=dict)
+    # per-scope function-level imports: (id(scope), alias)→dotted
+    scope_imports: dict = dataclasses.field(default_factory=dict)
+    class_attrs: dict = dataclasses.field(default_factory=dict)
+    # ^ class name → {attr: (value expr, FunctionInfo scope it was bound in)}
+
+    def zone(self) -> str:
+        """First path segment: 'src' / 'tests' / 'benchmarks' / ..."""
+        return self.path.split("/", 1)[0]
+
+
+class Project:
+    def __init__(self):
+        self.modules: dict[str, ModuleInfo] = {}  # path → module
+        self.by_modname: dict[str, ModuleInfo] = {}
+
+    def all_functions(self):
+        for m in self.modules.values():
+            yield from m.functions
+
+
+# -- parsing -----------------------------------------------------------------
+
+
+def module_name_for(path: str) -> str:
+    """Dotted module name from a repo-relative path."""
+    p = path.replace("\\", "/")
+    if p.endswith(".py"):
+        p = p[:-3]
+    if "/src/" in "/" + p:
+        p = p.split("src/", 1)[1]
+        return p.replace("/", ".")
+    if p.startswith("src/"):
+        return p[len("src/"):].replace("/", ".")
+    return p.rsplit("/", 1)[-1]
+
+
+class _Indexer(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.fn_stack: list[FunctionInfo] = []
+        self.cls_stack: list[str] = []
+
+    # scope bookkeeping ------------------------------------------------------
+    def _cur_fn(self) -> Optional[FunctionInfo]:
+        return self.fn_stack[-1] if self.fn_stack else None
+
+    def _scope_key(self):
+        cur = self._cur_fn()
+        return id(cur.node) if cur is not None else None
+
+    def _qual(self, name: str) -> str:
+        parts = []
+        if self.cls_stack:
+            parts.append(".".join(self.cls_stack))
+        if self.fn_stack:
+            parts = [self.fn_stack[-1].qualname]
+        parts.append(name)
+        return ".".join(parts)
+
+    def generic_visit(self, node):
+        for child in ast.iter_child_nodes(node):
+            self.mod.parents[id(child)] = node
+            self.mod.scope_of[id(child)] = self._cur_fn()
+            self.visit(child)
+
+    # defs -------------------------------------------------------------------
+    def _enter_function(self, node: FuncNode, name: str):
+        info = FunctionInfo(
+            qualname=self._qual(name),
+            module=self.mod,
+            node=node,
+            parent=self._cur_fn(),
+            cls=self.cls_stack[-1] if self.cls_stack and not self.fn_stack
+            else (self.fn_stack[-1].cls if self.fn_stack else None),
+        )
+        if info.parent is not None:
+            info.parent.nested.append(info)
+        self.mod.functions.append(info)
+        self.mod.by_node[id(node)] = info
+        self.fn_stack.append(info)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self._enter_function(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self._enter_function(node, f"<lambda:{node.lineno}>")
+
+    def visit_ClassDef(self, node):
+        self.cls_stack.append(node.name)
+        self.mod.class_attrs.setdefault(node.name, {})
+        self.generic_visit(node)
+        self.cls_stack.pop()
+
+    # imports ----------------------------------------------------------------
+    def _record_import(self, alias: str, target: str):
+        key = self._scope_key()
+        if key is None:
+            self.mod.imports[alias] = target
+        else:
+            self.mod.scope_imports[(key, alias)] = target
+
+    def visit_Import(self, node):
+        for a in node.names:
+            if a.asname:
+                self._record_import(a.asname, a.name)
+            else:
+                self._record_import(a.name.split(".", 1)[0],
+                                    a.name.split(".", 1)[0])
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        base = node.module or ""
+        if node.level:  # relative import: anchor at the project package
+            base = f"{PROJECT_ROOT_PKG}.{base}" if base else PROJECT_ROOT_PKG
+        for a in node.names:
+            self._record_import(a.asname or a.name,
+                                f"{base}.{a.name}" if base else a.name)
+        self.generic_visit(node)
+
+    # assignments ------------------------------------------------------------
+    def visit_Assign(self, node):
+        key = self._scope_key()
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                self.mod.assigns[(key, t.id)] = node.value
+            elif (
+                isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id == "self"
+            ):
+                cur = self._cur_fn()
+                cls = cur.cls if cur else None
+                if cls is not None:
+                    self.mod.class_attrs.setdefault(cls, {})[t.attr] = (
+                        node.value,
+                        cur,
+                    )
+        self.generic_visit(node)
+
+
+def build_module(path: str, source: str) -> ModuleInfo:
+    tree = ast.parse(source, filename=path)
+    mod = ModuleInfo(path=path, modname=module_name_for(path), source=source,
+                     tree=tree)
+    _Indexer(mod).visit(tree)
+    return mod
+
+
+def build_project(sources: dict[str, str]) -> Project:
+    proj = Project()
+    for path in sorted(sources):
+        try:
+            mod = build_module(path, sources[path])
+        except SyntaxError:
+            continue  # not lintable; leave to the test suite
+        proj.modules[path] = mod
+        proj.by_modname[mod.modname] = mod
+    _mark_boundaries(proj)
+    _grow_reachability(proj)
+    return proj
+
+
+# -- name resolution ---------------------------------------------------------
+
+
+def attr_chain(expr) -> Optional[list[str]]:
+    """``a.b.c`` → ["a", "b", "c"]; None for non Name/Attribute chains."""
+    parts = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return parts[::-1]
+    return None
+
+
+def resolved_dotted(expr, mod: ModuleInfo,
+                    scope: Optional[FunctionInfo] = None) -> Optional[str]:
+    """Import-resolved dotted name of an expression, e.g. ``pl.BlockSpec``
+    → ``jax.experimental.pallas.BlockSpec``. None when the chain is not
+    rooted at an import (locals stay unresolved on purpose)."""
+    chain = attr_chain(expr)
+    if not chain:
+        return None
+    head = None
+    s = scope
+    while s is not None and head is None:
+        head = mod.scope_imports.get((id(s.node), chain[0]))
+        s = s.parent
+    if head is None:
+        head = mod.imports.get(chain[0])
+    if head is None:
+        return None
+    return ".".join([head] + chain[1:])
+
+
+def _scope_chain(scope: Optional[FunctionInfo]):
+    while scope is not None:
+        yield scope
+        scope = scope.parent
+
+
+def resolve_callable(
+    expr,
+    scope: Optional[FunctionInfo],
+    mod: ModuleInfo,
+    proj: Project,
+    _depth: int = 0,
+    _seen: Optional[set] = None,
+) -> list[FunctionInfo]:
+    """Resolve an expression to project FunctionInfos it may denote.
+
+    Handles lambdas, local/module names, assignments, imports of project
+    symbols, ``self.method`` / ``self._attr`` (instance attrs bound in
+    methods), transparent wrappers (``jax.jit(f)``,
+    ``functools.partial(f, ...)``), and factory calls — a call to a
+    project function resolves to whatever its ``return`` statements
+    resolve to.
+    """
+    if _depth > 12:
+        return []
+    seen = _seen if _seen is not None else set()
+    key = id(expr)
+    if key in seen:
+        return []
+    seen.add(key)
+
+    if isinstance(expr, ast.Lambda):
+        f = mod.by_node.get(id(expr))
+        return [f] if f else []
+
+    if isinstance(expr, ast.IfExp):
+        return resolve_callable(expr.body, scope, mod, proj, _depth + 1, seen) + \
+            resolve_callable(expr.orelse, scope, mod, proj, _depth + 1, seen)
+
+    if isinstance(expr, ast.Call):
+        dotted = resolved_dotted(expr.func, mod, scope)
+        if dotted and any(dotted == w or dotted.endswith("." + w.split(".")[-1])
+                          and dotted.startswith(w.split(".")[0])
+                          for w in TRANSPARENT_WRAPPERS):
+            if expr.args:
+                return resolve_callable(expr.args[0], scope, mod, proj,
+                                        _depth + 1, seen)
+            for kw in expr.keywords:
+                if kw.arg in ("fun", "fn", "func"):
+                    return resolve_callable(kw.value, scope, mod, proj,
+                                            _depth + 1, seen)
+            return []
+        chain = attr_chain(expr.func)
+        if chain and chain[-1] == "partial" and expr.args:
+            return resolve_callable(expr.args[0], scope, mod, proj,
+                                    _depth + 1, seen)
+        # factory: a call to a project function yields its returns
+        factories = resolve_callable(expr.func, scope, mod, proj,
+                                     _depth + 1, seen)
+        out = []
+        for f in factories:
+            for node in own_nodes(f.node):
+                if isinstance(node, ast.Return) and node.value is not None:
+                    out += resolve_callable(node.value, f, f.module, proj,
+                                            _depth + 1, seen)
+            if isinstance(f.node, ast.Lambda):  # lambda factory: body IS return
+                out += resolve_callable(f.node.body, f, f.module, proj,
+                                        _depth + 1, seen)
+        return out
+
+    if isinstance(expr, ast.Name):
+        name = expr.id
+        for s in _scope_chain(scope):
+            for n in s.nested:
+                if n.name == name:
+                    return [n]
+            v = mod.assigns.get((id(s.node), name))
+            if v is not None and v is not expr:
+                return resolve_callable(v, s, mod, proj, _depth + 1, seen)
+            imp = mod.scope_imports.get((id(s.node), name))
+            if imp is not None:
+                return _resolve_project_symbol(imp, proj)
+        for f in mod.functions:
+            if f.parent is None and f.cls is None and f.name == name:
+                return [f]
+        v = mod.assigns.get((None, name))
+        if v is not None and v is not expr:
+            return resolve_callable(v, None, mod, proj, _depth + 1, seen)
+        imp = mod.imports.get(name)
+        if imp is not None:
+            return _resolve_project_symbol(imp, proj)
+        return []
+
+    if isinstance(expr, ast.Attribute):
+        chain = attr_chain(expr)
+        if not chain:
+            return []
+        if chain[0] == "self" and scope is not None and len(chain) == 2:
+            cls = None
+            for s in _scope_chain(scope):
+                if s.cls is not None:
+                    cls = s.cls
+                    break
+            if cls is not None:
+                bound = mod.class_attrs.get(cls, {}).get(chain[1])
+                if bound is not None:
+                    value, bind_scope = bound
+                    return resolve_callable(value, bind_scope, mod, proj,
+                                            _depth + 1, seen)
+                return [
+                    f
+                    for f in mod.functions
+                    if f.cls == cls and f.name == chain[1] and f.parent is None
+                ]
+            return []
+        dotted = resolved_dotted(expr, mod, scope)
+        if dotted is not None:
+            return _resolve_project_symbol(dotted, proj)
+        return []
+
+    return []
+
+
+def _resolve_project_symbol(dotted: str, proj: Project) -> list[FunctionInfo]:
+    if not dotted.startswith(PROJECT_ROOT_PKG + "."):
+        # tests/benchmarks are flat modules: try a bare-module match
+        head, _, rest = dotted.partition(".")
+        m = proj.by_modname.get(head)
+        if m is not None and rest and "." not in rest:
+            return [f for f in m.functions
+                    if f.parent is None and f.cls is None and f.name == rest]
+        return []
+    # longest module-name prefix wins: repro.models.model_zoo.paged_step_fn
+    parts = dotted.split(".")
+    for cut in range(len(parts) - 1, 0, -1):
+        modname = ".".join(parts[:cut])
+        m = proj.by_modname.get(modname)
+        if m is None:
+            continue
+        rest = parts[cut:]
+        if len(rest) == 1:
+            return [f for f in m.functions
+                    if f.parent is None and f.cls is None and f.name == rest[0]]
+        if len(rest) == 2:  # Class.method
+            return [f for f in m.functions
+                    if f.cls == rest[0] and f.name == rest[1]
+                    and f.parent is None]
+        return []
+    return []
+
+
+# -- boundary detection ------------------------------------------------------
+
+
+def _static_params_from_kwargs(fn: FunctionInfo, keywords) -> set:
+    names = fn.param_names()
+    static = set()
+    for kw in keywords:
+        if kw.arg == "static_argnums":
+            vals = kw.value
+            items = vals.elts if isinstance(vals, (ast.Tuple, ast.List)) else [vals]
+            for it in items:
+                if isinstance(it, ast.Constant) and isinstance(it.value, int):
+                    if 0 <= it.value < len(names):
+                        static.add(names[it.value])
+        elif kw.arg == "static_argnames":
+            vals = kw.value
+            items = vals.elts if isinstance(vals, (ast.Tuple, ast.List)) else [vals]
+            for it in items:
+                if isinstance(it, ast.Constant) and isinstance(it.value, str):
+                    static.add(it.value)
+    return static
+
+
+def _mark_root(fn: FunctionInfo, kind: str, line: int, via: str,
+               static_params: Optional[set] = None):
+    fn.boundary_kinds.setdefault(kind, line)
+    if static_params:
+        fn.static_params |= static_params
+    if not fn.via:
+        fn.via = via
+
+
+def _mark_boundaries(proj: Project):
+    for mod in proj.modules.values():
+        # decorator boundaries ------------------------------------------------
+        for fn in mod.functions:
+            if isinstance(fn.node, ast.Lambda):
+                continue
+            for dec in fn.node.decorator_list:
+                target, kwargs = dec, []
+                if isinstance(dec, ast.Call):
+                    target, kwargs = dec.func, dec.keywords
+                    chain = attr_chain(target)
+                    d = resolved_dotted(target, mod, fn.parent)
+                    if (d == "functools.partial"
+                            or (chain and chain[-1] == "partial")) and dec.args:
+                        target, kwargs = dec.args[0], dec.keywords
+                d = resolved_dotted(target, mod, fn.parent)
+                if d in JIT_WRAPPERS:
+                    _mark_root(
+                        fn, "jit", fn.line,
+                        f"@jit at {mod.path}:{fn.line}",
+                        _static_params_from_kwargs(fn, kwargs),
+                    )
+        # call-site boundaries ------------------------------------------------
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            scope = mod.scope_of.get(id(node))
+            d = resolved_dotted(node.func, mod, scope)
+            chain = attr_chain(node.func)
+            if d in JIT_WRAPPERS:
+                static = set()
+                targets = []
+                if node.args:
+                    targets = resolve_callable(node.args[0], scope, mod, proj)
+                for kw in node.keywords:
+                    if kw.arg in ("fun", "fn"):
+                        targets = resolve_callable(kw.value, scope, mod, proj)
+                for t in targets:
+                    _mark_root(
+                        t, "jit", node.lineno,
+                        f"jax.jit at {mod.path}:{node.lineno}",
+                        _static_params_from_kwargs(t, node.keywords),
+                    )
+                continue
+            if d in CONTROL_BODY_ARGS or (
+                d is None and chain and len(chain) >= 2
+                and chain[-2] == "lax" and "jax.lax." + chain[-1] in CONTROL_BODY_ARGS
+            ):
+                key = d if d in CONTROL_BODY_ARGS else "jax.lax." + chain[-1]
+                for idx in CONTROL_BODY_ARGS[key]:
+                    if idx < len(node.args):
+                        for t in resolve_callable(node.args[idx], scope, mod,
+                                                  proj):
+                            _mark_root(
+                                t, "control", node.lineno,
+                                f"{key.split('.')[-1]} body at "
+                                f"{mod.path}:{node.lineno}",
+                            )
+                continue
+            if (d is not None and d.endswith(".pallas_call")) or (
+                chain and chain[-1] == "pallas_call"
+            ):
+                if node.args:
+                    for t in resolve_callable(node.args[0], scope, mod, proj):
+                        _mark_root(
+                            t, "pallas", node.lineno,
+                            f"pallas_call at {mod.path}:{node.lineno}",
+                        )
+
+
+# -- reachability ------------------------------------------------------------
+
+
+def own_nodes(fn_node: FuncNode):
+    """All AST nodes of a function body WITHOUT descending into nested
+    function/lambda bodies (those are separate FunctionInfos)."""
+    body = fn_node.body if isinstance(fn_node.body, list) else [fn_node.body]
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def _grow_reachability(proj: Project):
+    work = [f for f in proj.all_functions() if f.boundary_kinds]
+    for f in work:
+        f.reachable = True
+    while work:
+        fn = work.pop()
+        mod = fn.module
+
+        def enqueue(t: FunctionInfo, why: str):
+            if not t.reachable:
+                t.reachable = True
+                t.via = t.via or why
+                work.append(t)
+
+        for n in fn.nested:  # closures of a compiled fn are compiled
+            enqueue(n, fn.via)
+        for node in own_nodes(fn.node):
+            if isinstance(node, ast.Call):
+                for t in resolve_callable(node.func, fn, mod, proj):
+                    enqueue(t, fn.via or f"called from {fn.qualname}")
+
+
+# -- tracer inference --------------------------------------------------------
+
+
+def _is_arrayish(expr, mod: ModuleInfo, scope: FunctionInfo, tracers: set) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in tracers
+    if isinstance(expr, ast.Call):
+        d = resolved_dotted(expr.func, mod, scope)
+        if d is not None and (d == "jax" or d.startswith("jax.")):
+            return True
+        # method call on a tracer (x.astype(...), x.at[...].set(...))
+        if isinstance(expr.func, ast.Attribute):
+            return _is_arrayish(expr.func.value, mod, scope, tracers)
+        return False
+    if isinstance(expr, (ast.BinOp,)):
+        return (_is_arrayish(expr.left, mod, scope, tracers)
+                or _is_arrayish(expr.right, mod, scope, tracers))
+    if isinstance(expr, ast.UnaryOp):
+        return _is_arrayish(expr.operand, mod, scope, tracers)
+    if isinstance(expr, ast.Compare):
+        return (_is_arrayish(expr.left, mod, scope, tracers)
+                or any(_is_arrayish(c, mod, scope, tracers)
+                       for c in expr.comparators))
+    if isinstance(expr, ast.Subscript):
+        return _is_arrayish(expr.value, mod, scope, tracers)
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in STATIC_ATTRS:
+            return False
+        return _is_arrayish(expr.value, mod, scope, tracers)
+    if isinstance(expr, ast.IfExp):
+        return (_is_arrayish(expr.body, mod, scope, tracers)
+                or _is_arrayish(expr.orelse, mod, scope, tracers))
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return any(_is_arrayish(e, mod, scope, tracers) for e in expr.elts)
+    return False
+
+
+def infer_tracers(fn: FunctionInfo) -> set:
+    """Names in ``fn`` that (conservatively) hold traced values."""
+    tracers: set = set()
+    if fn.boundary_kinds:
+        for p in fn.param_names():
+            if p in ("self", "cls") or p in fn.static_params:
+                continue
+            tracers.add(p)
+        if "pallas" in fn.boundary_kinds:
+            # keyword-only kernel params are functools.partial-bound
+            # compile-time constants, never refs
+            tracers -= set(fn.kwonly_names())
+    mod = fn.module
+    for _ in range(3):  # small fixed point
+        changed = False
+        for node in own_nodes(fn.node):
+            targets = []
+            if isinstance(node, ast.Assign):
+                value = node.value
+                for t in node.targets:
+                    targets.append(t)
+            elif isinstance(node, ast.AugAssign):
+                value = node.value
+                targets.append(node.target)
+            else:
+                continue
+            if not _is_arrayish(value, mod, fn, tracers):
+                continue
+            for t in targets:
+                names = []
+                if isinstance(t, ast.Name):
+                    names = [t.id]
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    names = [e.id for e in t.elts if isinstance(e, ast.Name)]
+                for n in names:
+                    if n not in tracers:
+                        tracers.add(n)
+                        changed = True
+        if not changed:
+            break
+    return tracers
+
+
+def uses_tracer(expr, tracers: set, mod: ModuleInfo) -> Optional[str]:
+    """Name of a tracer used *dynamically* inside ``expr`` (None if all
+    uses are static: ``.shape``/``len(x)``/``isinstance``...)."""
+    parents: dict[int, ast.AST] = {}
+    for node in ast.walk(expr):
+        for child in ast.iter_child_nodes(node):
+            parents[id(child)] = node
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Name) and node.id in tracers):
+            continue
+        parent = parents.get(id(node))
+        if isinstance(parent, ast.Attribute) and parent.attr in STATIC_ATTRS:
+            continue
+        if (
+            isinstance(parent, ast.Call)
+            and node in parent.args
+            and isinstance(parent.func, ast.Name)
+            and parent.func.id in STATIC_CONSUMERS
+        ):
+            continue
+        return node.id
+    return None

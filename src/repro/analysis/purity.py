@@ -1,0 +1,201 @@
+"""Rule pack ``purity-*``: host effects reachable from a jit boundary.
+
+Applied to every function the call graph marks reachable from a
+compiled-trace boundary (see :mod:`repro.analysis.project`). The Python
+body of such a function runs once per compiled SHAPE, not once per
+call — host clocks, numpy RNG, Python-state mutation, and metrics
+stamps there are trace-time effects masquerading as run-time ones.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding
+from repro.analysis.project import (
+    FunctionInfo,
+    Project,
+    attr_chain,
+    infer_tracers,
+    own_nodes,
+    resolved_dotted,
+    uses_tracer,
+)
+
+__all__ = ["check_function"]
+
+_MUTATORS = frozenset(
+    {"append", "extend", "insert", "add", "update", "pop", "popitem",
+     "remove", "discard", "clear", "setdefault", "appendleft", "popleft"}
+)
+_CASTS = frozenset({"float", "int", "bool", "complex"})
+_NP_CONCRETIZERS = ("numpy.asarray", "numpy.array", "numpy.float64",
+                    "numpy.int64", "numpy.float32", "numpy.int32")
+
+
+def _local_names(fn: FunctionInfo) -> set:
+    """Names bound inside the function (params, assigns, loop targets,
+    comprehension targets, with-items)."""
+    out = set(fn.param_names()) | set(fn.kwonly_names())
+    a = fn.node.args
+    if a.vararg:
+        out.add(a.vararg.arg)
+    if a.kwarg:
+        out.add(a.kwarg.arg)
+    for node in own_nodes(fn.node):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.For):
+            targets = [node.target]
+        elif isinstance(node, (ast.comprehension,)):
+            targets = [node.target]
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            targets = [node.optional_vars]
+        for t in targets:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    out.add(sub.id)
+    return out
+
+
+def check_function(fn: FunctionInfo, proj: Project) -> list[Finding]:
+    mod = fn.module
+    path = mod.path
+    via = f" [compiled path: {fn.via}]" if fn.via else ""
+    tracers = infer_tracers(fn)
+    local = _local_names(fn)
+    findings: list[Finding] = []
+
+    def add(rule: str, node, msg: str):
+        findings.append(Finding(rule, path, node.lineno, msg + via))
+
+    for node in own_nodes(fn.node):
+        # -- statements ------------------------------------------------------
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            add(
+                "purity-state-mutation",
+                node,
+                f"`{'global' if isinstance(node, ast.Global) else 'nonlocal'} "
+                f"{', '.join(node.names)}` in compiled `{fn.name}` mutates "
+                "host state once per trace, not per call",
+            )
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    base = attr_chain(t.value)
+                    base_s = ".".join(base) if base else "<expr>"
+                    add(
+                        "purity-state-mutation",
+                        node,
+                        f"assignment to `{base_s}.{t.attr}` inside compiled "
+                        f"`{fn.name}` runs once per trace — the attribute "
+                        "will count compilations, not calls",
+                    )
+        if isinstance(node, (ast.If, ast.While)):
+            name = uses_tracer(node.test, tracers, mod)
+            if name is not None:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                add(
+                    "purity-python-branch",
+                    node,
+                    f"Python `{kw}` on traced value `{name}` in `{fn.name}`; "
+                    "use jax.lax.cond/while_loop or jnp.where",
+                )
+        if isinstance(node, ast.Assert):
+            name = uses_tracer(node.test, tracers, mod)
+            if name is not None:
+                add(
+                    "purity-python-branch",
+                    node,
+                    f"`assert` on traced value `{name}` in `{fn.name}` "
+                    "concretizes at trace time; use checkify or a host-side "
+                    "check",
+                )
+
+        # -- calls -----------------------------------------------------------
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = resolved_dotted(node.func, mod, fn)
+        chain = attr_chain(node.func)
+
+        if dotted is not None and (dotted == "time" or dotted.startswith("time.")):
+            add(
+                "purity-host-time",
+                node,
+                f"host clock `{dotted}()` reachable from a jit boundary in "
+                f"`{fn.name}` — reads trace time, not run time",
+            )
+        if dotted is not None and dotted.startswith("numpy.random"):
+            add(
+                "purity-np-random",
+                node,
+                f"`{dotted}()` on the compiled path in `{fn.name}` draws at "
+                "trace time and freezes the value into the program; use "
+                "jax.random with counter-based keys",
+            )
+        if dotted is not None and dotted.startswith("repro.serve.metrics"):
+            add(
+                "purity-metrics-call",
+                node,
+                f"serve.metrics call `{dotted}` on the compiled path in "
+                f"`{fn.name}`; telemetry is host-side by contract",
+            )
+        elif chain and "metrics" in chain[:-1]:
+            add(
+                "purity-metrics-call",
+                node,
+                f"metrics call `{'.'.join(chain)}(...)` on the compiled path "
+                f"in `{fn.name}`; stamp events around the jitted call, not "
+                "inside it",
+            )
+
+        # tracer concretization
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            add(
+                "purity-tracer-leak",
+                node,
+                f"`.item()` in compiled `{fn.name}` forces a concrete value "
+                "mid-trace",
+            )
+        if (
+            isinstance(node.func, ast.Name)
+            and node.func.id in _CASTS
+            and node.args
+        ):
+            name = uses_tracer(node.args[0], tracers, mod)
+            if name is not None:
+                add(
+                    "purity-tracer-leak",
+                    node,
+                    f"`{node.func.id}({name})` concretizes a traced value in "
+                    f"`{fn.name}`",
+                )
+        if dotted in _NP_CONCRETIZERS and node.args:
+            name = uses_tracer(node.args[0], tracers, mod)
+            if name is not None:
+                add(
+                    "purity-tracer-leak",
+                    node,
+                    f"`{dotted}({name})` pulls a traced value to host in "
+                    f"`{fn.name}`",
+                )
+
+        # closure/param container mutation
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in _MUTATORS
+            and isinstance(node.func.value, ast.Name)
+        ):
+            base = node.func.value.id
+            if base not in local and base not in ("self", "cls"):
+                add(
+                    "purity-state-mutation",
+                    node,
+                    f"`{base}.{node.func.attr}(...)` mutates a closed-over "
+                    f"container inside compiled `{fn.name}` — runs once per "
+                    "trace",
+                )
+    return findings

@@ -1,0 +1,112 @@
+"""Orchestration: collect files, build the project, run rule packs,
+apply inline suppressions, render text/JSON reports."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional, Sequence
+
+from repro.analysis import conventions, pallas_rules, purity
+from repro.analysis.core import Finding, apply_suppressions, parse_suppressions
+from repro.analysis.project import build_project
+
+__all__ = ["lint_sources", "lint_paths", "collect_files", "render_text",
+           "render_json"]
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache"}
+
+
+def collect_files(paths: Sequence, root: Optional[Path] = None) -> dict:
+    """→ {repo-relative display path: absolute Path} for every .py file
+    under the given files/directories."""
+    root = Path(root) if root is not None else Path.cwd()
+    out = {}
+    for p in paths:
+        p = Path(p)
+        if not p.is_absolute():
+            p = root / p
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            if any(part in _SKIP_DIRS for part in f.parts):
+                continue
+            try:
+                rel = f.relative_to(root).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            out[rel] = f
+    return out
+
+
+def lint_sources(sources: dict, rules: Optional[Sequence[str]] = None
+                 ) -> list[Finding]:
+    """Lint in-memory sources: {display path: source text} → findings
+    (suppressed ones included, flagged). The display path drives the
+    path-scoped conventions rules, so tests can pretend a snippet lives
+    at ``src/repro/serve/scheduler.py``."""
+    proj = build_project(sources)
+    findings: list[Finding] = []
+    sups_by_path = {}
+    for path, src in sources.items():
+        sups, meta = parse_suppressions(src, path)
+        sups_by_path[path] = sups
+        findings += meta
+    for fn in proj.all_functions():
+        if fn.reachable:
+            findings += purity.check_function(fn, proj)
+    for mod in proj.modules.values():
+        findings += pallas_rules.check_module(mod, proj)
+        findings += conventions.check_module(mod, proj)
+    if rules:
+        allowed = set(rules)
+        findings = [f for f in findings if f.rule in allowed]
+    # dedupe (a function can be reached along several edges)
+    seen = set()
+    unique = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule, f.message)):
+        key = (f.rule, f.path, f.line, f.message)
+        if key in seen:
+            continue
+        seen.add(key)
+        unique.append(f)
+    for path, sups in sups_by_path.items():
+        apply_suppressions([f for f in unique if f.path == path], sups)
+    return unique
+
+
+def lint_paths(paths: Sequence, root: Optional[Path] = None,
+               rules: Optional[Sequence[str]] = None) -> list[Finding]:
+    files = collect_files(paths, root)
+    sources = {}
+    for rel, f in files.items():
+        try:
+            sources[rel] = f.read_text()
+        except (OSError, UnicodeDecodeError):
+            continue
+    return lint_sources(sources, rules=rules)
+
+
+def render_text(findings: list[Finding], show_suppressed: bool = False) -> str:
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    lines = [f.render() for f in active]
+    if show_suppressed:
+        lines += [f.render() for f in suppressed]
+    lines.append(
+        f"tracelint: {len(active)} finding(s), "
+        f"{len(suppressed)} suppressed"
+    )
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding]) -> str:
+    active = [f for f in findings if not f.suppressed]
+    return json.dumps(
+        {
+            "findings": [f.as_dict() for f in findings],
+            "counts": {
+                "active": len(active),
+                "suppressed": len(findings) - len(active),
+            },
+        },
+        indent=2,
+    )

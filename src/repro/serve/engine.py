@@ -153,7 +153,8 @@ class Engine:
 
     @functools.partial(jax.jit, static_argnums=0)
     def _generate(self, tokens_main, tokens_rest, rest_len, samp):
-        self.n_traces += 1  # python body runs once per compiled shape
+        # tracelint: allow[purity-state-mutation] -- trace counter: exploits once-per-trace execution to count compilations
+        self.n_traces += 1
         B = tokens_rest.shape[0]
         caches = zoo.cache_init(self.cfg)(self.cfg, B, self.scfg.ctx_len)
         if tokens_main.shape[1] > 0:

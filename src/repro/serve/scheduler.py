@@ -259,6 +259,7 @@ class PagedEngine:
         cap = self.cap
 
         def _step(params, tokens, pools, tables, pos, active, samp, counts):
+            # tracelint: allow[purity-state-mutation] -- trace counter: the ==1 invariant gated by hlo_budget.py relies on once-per-trace execution
             self.decode_traces += 1
             pages = {"tables": tables, "active": active,
                      "cap": jnp.asarray(cap, jnp.int32)}
@@ -284,6 +285,7 @@ class PagedEngine:
             # sequential oracle is bit-identical per request; batched
             # over an admission group (every row-wise op makes row j of
             # a batch-B prefill bit-identical to its batch-1 run)
+            # tracelint: allow[purity-state-mutation] -- trace counter: counts prefill compilations (one per admission bucket) by design
             self.prefill_traces += 1
             caches = zoo.cache_init(cfg)(cfg, tok_main.shape[0], cap)
             if tok_main.shape[1] > 0:

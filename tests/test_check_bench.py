@@ -1,0 +1,156 @@
+"""scripts/check_bench.py: direction classification, the >2x hard gate,
+warn-only suffix handling, and the suffix-contract sync with the
+tracelint conventions pack."""
+from __future__ import annotations
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import conventions
+
+REPO = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", REPO / "scripts" / "check_bench.py"
+)
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def run_check(tmp_path, base, new, backend=("cpu", "cpu")):
+    bp = tmp_path / "base.json"
+    np_ = tmp_path / "new.json"
+    bp.write_text(json.dumps({"backend": backend[0], "results": base}))
+    np_.write_text(json.dumps({"backend": backend[1], "results": new}))
+    return check_bench.main(str(bp), str(np_))
+
+
+# -- _direction --------------------------------------------------------------
+
+def test_direction_higher_is_better():
+    for s in check_bench.HIGHER_IS_BETTER:
+        assert check_bench._direction(f"decode{s}") == 1
+
+
+def test_direction_lower_is_better():
+    for s in check_bench.LOWER_IS_BETTER:
+        assert check_bench._direction(f"x{s}") == -1
+
+
+def test_direction_bytes_lower_is_better():
+    for m in ("weight_bytes", "L8_scan_hlo_bytes", "cache_bytes_live",
+              "kernel_workspace_bytes"):
+        assert check_bench._direction(m) == -1
+
+
+def test_direction_informational():
+    for m in ("requests", "seed", "offered_rate_req_s", "preemptions"):
+        assert check_bench._direction(m) == 0
+
+
+def test_warn_only_membership():
+    # every warn-only metric still has a direction (printed as a trend)
+    for s in check_bench.WARN_ONLY_SUFFIXES:
+        assert check_bench._direction(f"x{s}") == -1
+    # but the hard-gated families are NOT warn-only
+    assert not "decode_tok_per_s".endswith(check_bench.WARN_ONLY_SUFFIXES)
+    assert not "weight_bytes".endswith(check_bench.WARN_ONLY_SUFFIXES)
+
+
+# -- the hard gate -----------------------------------------------------------
+
+def test_throughput_halved_fails(tmp_path):
+    assert run_check(
+        tmp_path,
+        {"v": {"decode_tok_per_s": 100.0}},
+        {"v": {"decode_tok_per_s": 45.0}},
+    ) == 1
+
+
+def test_throughput_within_2x_passes(tmp_path):
+    assert run_check(
+        tmp_path,
+        {"v": {"decode_tok_per_s": 100.0}},
+        {"v": {"decode_tok_per_s": 60.0}},
+    ) == 0
+
+
+def test_bytes_doubled_fails(tmp_path):
+    assert run_check(
+        tmp_path,
+        {"v": {"weight_bytes": 1000}},
+        {"v": {"weight_bytes": 2500}},
+    ) == 1
+
+
+def test_warn_only_regression_never_fails(tmp_path):
+    base = {"v": {s_key: 10.0 for s_key in
+                  (f"x{s}" for s in check_bench.WARN_ONLY_SUFFIXES)}}
+    new = {"v": {k: v * 10 for k, v in base["v"].items()}}  # 10x worse
+    assert run_check(tmp_path, base, new) == 0
+
+
+def test_cross_backend_walltime_not_gated(tmp_path):
+    # tok/s collapsed 10x but the backend changed: warn-only
+    assert run_check(
+        tmp_path,
+        {"v": {"decode_tok_per_s": 100.0}},
+        {"v": {"decode_tok_per_s": 10.0}},
+        backend=("tpu", "cpu"),
+    ) == 0
+
+
+def test_cross_backend_bytes_still_gated(tmp_path):
+    assert run_check(
+        tmp_path,
+        {"v": {"weight_bytes": 1000}},
+        {"v": {"weight_bytes": 5000}},
+        backend=("tpu", "cpu"),
+    ) == 1
+
+
+def test_improvements_pass(tmp_path):
+    assert run_check(
+        tmp_path,
+        {"v": {"decode_tok_per_s": 50.0, "weight_bytes": 2000}},
+        {"v": {"decode_tok_per_s": 500.0, "weight_bytes": 200}},
+    ) == 0
+
+
+# -- the suffix contract is shared with tracelint ----------------------------
+
+def test_conventions_mirror_check_bench():
+    assert set(conventions.HIGHER_IS_BETTER_SUFFIXES) == set(
+        check_bench.HIGHER_IS_BETTER
+    )
+    assert set(conventions.LOWER_IS_BETTER_SUFFIXES) == set(
+        check_bench.LOWER_IS_BETTER
+    )
+    assert set(conventions.WARN_ONLY_SUFFIXES) == set(
+        check_bench.WARN_ONLY_SUFFIXES
+    )
+
+
+def test_real_bench_keys_classify():
+    # the committed baseline's metric keys must all get a direction or be
+    # knowingly informational — a near-miss key would silently lose its
+    # gate (this is what conv-bench-metric-suffix lints for)
+    informational = {"requests", "seed", "offered_rate_req_s", "preemptions",
+                     "early_stops", "prefill_calls", "prefill_traces",
+                     "decode_steps", "pool_occupancy_mean",
+                     "pool_occupancy_peak", "queue_depth_peak"}
+    for bench in ("BENCH_serve.json", "BENCH_load.json"):
+        p = REPO / bench
+        if not p.exists():
+            continue
+        data = json.loads(p.read_text())
+        for variant, metrics in data.get("results", {}).items():
+            for key in metrics:
+                d = check_bench._direction(key)
+                assert d != 0 or key in informational, (
+                    f"{bench}:{variant}.{key} classifies informational — "
+                    "rename it to a gated suffix or list it here"
+                )

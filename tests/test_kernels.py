@@ -11,7 +11,7 @@ from repro.kernels.lora_matmul import lora_qmatmul
 from repro.kernels.nf4_matmul import nf4_matmul
 from repro.kernels.quantize import quantize4
 
-RNG = np.random.default_rng(0)
+RNG = np.random.default_rng(0)  # tracelint: allow[conv-module-rng] -- shared seeded fixture; draw order within this file is fixed
 SHAPES = [(128, 128, 128), (256, 512, 256), (64, 256, 512), (512, 128, 384)]
 
 

@@ -26,7 +26,7 @@ from repro.core.qpruner import QPrunerConfig, prune_model, quantize_blocks
 from repro.core.quantization import QuantConfig
 from repro.models import model_zoo as zoo
 
-RNG = np.random.default_rng(0)
+RNG = np.random.default_rng(0)  # tracelint: allow[conv-module-rng] -- shared seeded fixture; draw order within this file is fixed
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ from repro.serve.engine import Engine, ServeConfig
 from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update, global_norm
 from repro.train.trainer import make_train_step
 
-RNG = np.random.default_rng(0)
+RNG = np.random.default_rng(0)  # tracelint: allow[conv-module-rng] -- shared seeded fixture; draw order within this file is fixed
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,558 @@
+"""tracelint: per-rule fixtures (positive, negative, suppression), the
+repo self-lint meta-test, and seeded negative-injection checks.
+
+Fixtures go through :func:`repro.analysis.runner.lint_sources` with
+virtual display paths ("src/repro/...", "tests/test_x.py",
+"benchmarks/b.py") — the path drives the zone-scoped conventions rules
+exactly as it does for real files.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import RULES, explain
+from repro.analysis.runner import lint_paths, lint_sources
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run(src, path="src/repro/mod.py", extra=None):
+    sources = {path: textwrap.dedent(src)}
+    if extra:
+        sources.update({k: textwrap.dedent(v) for k, v in extra.items()})
+    return lint_sources(sources)
+
+
+def rules_of(findings, *, active_only=True):
+    return sorted({f.rule for f in findings
+                   if not (active_only and f.suppressed)})
+
+
+# -- purity: host effects reachable from a jit boundary ----------------------
+
+JITTED_TIME = """
+    import time
+    import jax
+
+    @jax.jit
+    def step(x):
+        t0 = time.perf_counter()
+        return x + t0
+"""
+
+
+def test_host_time_in_jit():
+    assert "purity-host-time" in rules_of(run(JITTED_TIME))
+
+
+def test_host_time_outside_jit_is_clean():
+    src = """
+        import time
+
+        def host_loop():
+            return time.perf_counter()
+    """
+    # purity pack silent (not reachable); conventions pack still flags
+    # the clock outside launch/ — so pin the path to launch/
+    fs = run(src, path="src/repro/launch/x.py")
+    assert rules_of(fs) == []
+
+
+def test_scan_body_is_a_boundary():
+    src = """
+        import time
+        import jax
+
+        def outer(xs):
+            def body(c, x):
+                time.sleep(0)
+                return c, x
+            return jax.lax.scan(body, 0, xs)
+    """
+    fs = run(src, path="src/repro/launch/x.py")
+    assert "purity-host-time" in rules_of(fs)
+
+
+def test_factory_returned_step_is_compiled_but_factory_is_not():
+    src = """
+        import time
+        import jax
+
+        def make_step(cfg):
+            if cfg.family == "encdec":   # host-time branch: fine
+                def step(x):
+                    return x + time.time()
+            else:
+                def step(x):
+                    return x
+            return step
+
+        def serve(cfg, x):
+            f = jax.jit(make_step(cfg))
+            return f(x)
+    """
+    fs = run(src, path="src/repro/launch/x.py")
+    assert "purity-host-time" in rules_of(fs)
+    assert "purity-python-branch" not in rules_of(fs)
+
+
+def test_np_random_in_jit():
+    src = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def step(x):
+            return x + np.random.normal()
+    """
+    assert "purity-np-random" in rules_of(run(src))
+
+
+def test_python_branch_on_tracer():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+    """
+    assert "purity-python-branch" in rules_of(run(src))
+
+
+def test_branch_on_static_shape_is_clean():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x.shape[1] > 0:
+                return x * 2
+            return x
+    """
+    assert "purity-python-branch" not in rules_of(run(src))
+
+
+def test_static_argnums_params_are_not_tracers():
+    src = """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnums=0)
+        def step(mode, x):
+            if mode == "fast":
+                return x
+            return x * 2
+    """
+    assert "purity-python-branch" not in rules_of(run(src))
+
+
+def test_state_mutation_in_jit():
+    src = """
+        import jax
+
+        class Eng:
+            def go(self):
+                @jax.jit
+                def step(x):
+                    self.n += 1
+                    return x
+                return step
+    """
+    assert "purity-state-mutation" in rules_of(run(src))
+
+
+def test_tracer_leak_item_and_float():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            a = float(x)
+            b = x.sum().item()
+            return a + b
+    """
+    assert rules_of(run(src)).count("purity-tracer-leak") == 1
+    assert len([f for f in run(src) if f.rule == "purity-tracer-leak"]) == 2
+
+
+def test_metrics_call_in_jit():
+    src = """
+        import jax
+
+        def make(metrics):
+            @jax.jit
+            def step(x):
+                metrics.counter("steps").inc()
+                return x
+            return step
+    """
+    assert "purity-metrics-call" in rules_of(run(src))
+
+
+def test_instance_attr_jit_binding_is_tracked():
+    # self._step = jax.jit(_step) — the closure is compiled
+    src = """
+        import time
+        import jax
+
+        class Eng:
+            def __init__(self):
+                def _step(x):
+                    time.sleep(0)
+                    return x
+                self._step = jax.jit(_step)
+    """
+    fs = run(src, path="src/repro/launch/x.py")
+    assert "purity-host-time" in rules_of(fs)
+
+
+# -- pallas ------------------------------------------------------------------
+
+def test_pallas_kernel_return_flagged():
+    src = """
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2
+            return x_ref[...]
+
+        def launch(x):
+            return pl.pallas_call(_kernel, out_shape=x)(x)
+    """
+    assert "pallas-ref-params" in rules_of(run(src))
+
+
+def test_pallas_ref_store_is_clean():
+    src = """
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2
+
+        def launch(x):
+            return pl.pallas_call(_kernel, out_shape=x)(x)
+    """
+    assert rules_of(run(src)) == []
+
+
+def test_pallas_traced_grid_flagged():
+    src = """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        @jax.jit
+        def launch(x, n):
+            return pl.pallas_call(_kernel, grid=(n,), out_shape=x)(x)
+    """
+    assert "pallas-static-grid" in rules_of(run(src))
+
+
+def test_pallas_shape_derived_grid_is_clean():
+    src = """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        @jax.jit
+        def launch(x):
+            return pl.pallas_call(_kernel, grid=(x.shape[0],), out_shape=x)(x)
+    """
+    assert "pallas-static-grid" not in rules_of(run(src))
+
+
+def test_pallas_impure_index_map_flagged():
+    src = """
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def launch(x, table):
+            spec = pl.BlockSpec((1, 128), lambda i: (table.lookup(i), 0))
+            return pl.pallas_call(_kernel, in_specs=[spec], out_shape=x)(x)
+    """
+    assert "pallas-pure-index-map" in rules_of(run(src))
+
+
+def test_pallas_arithmetic_index_map_is_clean():
+    src = """
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def launch(x):
+            spec = pl.BlockSpec((1, 128), lambda i, j: (i, max(j - 1, 0)))
+            return pl.pallas_call(_kernel, in_specs=[spec], out_shape=x)(x)
+    """
+    assert "pallas-pure-index-map" not in rules_of(run(src))
+
+
+# -- conventions -------------------------------------------------------------
+
+def test_global_seed_flagged_anywhere():
+    src = """
+        import numpy as np
+        np.random.seed(0)
+    """
+    for path in ("src/repro/mod.py", "tests/test_x.py", "benchmarks/b.py"):
+        assert "conv-global-random" in rules_of(run(src, path=path)), path
+
+
+def test_local_seeded_rng_is_clean():
+    src = """
+        import numpy as np
+
+        def test_thing():
+            rng = np.random.default_rng(0)
+            return rng.normal()
+    """
+    assert rules_of(run(src, path="tests/test_x.py")) == []
+
+
+def test_unseeded_rng_flagged():
+    src = """
+        import numpy as np
+
+        def test_thing():
+            rng = np.random.default_rng()
+            return rng.normal()
+    """
+    assert "conv-unseeded-rng" in rules_of(run(src, path="tests/test_x.py"))
+
+
+def test_module_rng_flagged_in_tests_only():
+    src = """
+        import numpy as np
+        RNG = np.random.default_rng(0)
+    """
+    assert "conv-module-rng" in rules_of(run(src, path="tests/test_x.py"))
+    assert "conv-module-rng" not in rules_of(
+        run(src, path="benchmarks/b.py"))
+
+
+def test_host_clock_zones():
+    src = """
+        import time
+
+        def wall():
+            return time.monotonic()
+    """
+    assert "conv-host-clock" in rules_of(run(src, path="src/repro/serve/x.py"))
+    for ok in ("src/repro/launch/x.py", "benchmarks/b.py", "scripts/s.py",
+               "src/repro/serve/metrics.py"):
+        assert "conv-host-clock" not in rules_of(run(src, path=ok)), ok
+
+
+def test_bench_metric_near_miss_flagged():
+    src = """
+        def report(t):
+            return {"decode_tokens_per_second": 1.0 / t,
+                    "decode_tok_per_s": 1.0 / t,
+                    "ttft_p50": 3.0,
+                    "ttft_ms_p50": 3.0}
+    """
+    fs = [f for f in run(src, path="benchmarks/b.py")
+          if f.rule == "conv-bench-metric-suffix"]
+    assert len(fs) == 2  # the two near-miss spellings, not the valid keys
+    # outside benchmarks/ the rule is silent (dicts are not metrics)
+    assert "conv-bench-metric-suffix" not in rules_of(run(src))
+
+
+def test_bit_literals():
+    bad = """
+        def setup(q):
+            return q.pack(bits=[4, 6, 8])
+    """
+    good = """
+        def setup(q):
+            return q.pack(bits=[4, 8, 16])
+    """
+    assert "conv-bit-literal" in rules_of(run(bad))
+    assert "conv-bit-literal" not in rules_of(run(good))
+
+
+def test_bit_literal_scalar_name_not_flagged():
+    src = """
+        def f():
+            total_bits = 32
+            return total_bits
+    """
+    assert "conv-bit-literal" not in rules_of(run(src))
+
+
+# -- suppressions ------------------------------------------------------------
+
+def test_suppression_with_reason_silences():
+    src = """
+        import jax
+
+        class Eng:
+            def go(self):
+                @jax.jit
+                def step(x):
+                    self.n += 1  # tracelint: allow[purity-state-mutation] -- trace counter by design
+                    return x
+                return step
+    """
+    fs = run(src)
+    assert rules_of(fs) == []
+    sup = [f for f in fs if f.suppressed]
+    assert len(sup) == 1 and sup[0].rule == "purity-state-mutation"
+    assert "trace counter" in sup[0].suppress_reason
+
+
+def test_standalone_suppression_covers_next_line():
+    src = """
+        import jax
+
+        class Eng:
+            def go(self):
+                @jax.jit
+                def step(x):
+                    # tracelint: allow[purity-state-mutation] -- counts compilations
+                    self.n += 1
+                    return x
+                return step
+    """
+    assert rules_of(run(src)) == []
+
+
+def test_bare_allow_is_itself_a_finding():
+    src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:  # tracelint: allow[purity-python-branch]
+                return x
+            return -x
+    """
+    fs = run(src)
+    assert "lint-bare-allow" in rules_of(fs)
+    # a reasonless allow must NOT silence the underlying finding
+    assert "purity-python-branch" in rules_of(fs)
+
+
+def test_unknown_rule_in_allow_flagged():
+    src = """
+        x = 1  # tracelint: allow[no-such-rule] -- whatever
+    """
+    assert "lint-unknown-rule" in rules_of(run(src))
+
+
+def test_suppression_does_not_cover_other_rules():
+    src = """
+        import time
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:  # tracelint: allow[purity-python-branch] -- legacy path
+                return x + time.time()
+            return -x
+    """
+    fs = run(src, path="src/repro/launch/x.py")
+    # the branch is silenced; the clock on the same line region is not
+    assert "purity-python-branch" not in rules_of(fs)
+    assert "purity-host-time" in rules_of(fs)
+
+
+# -- rule metadata -----------------------------------------------------------
+
+def test_every_rule_has_explain_text():
+    for rid in RULES:
+        text = explain(rid)
+        assert text and rid in text, rid
+    assert explain("nope") is None
+
+
+# -- the repo self-lints clean ----------------------------------------------
+
+def test_repo_self_lint_clean():
+    findings = lint_paths(["src", "tests", "benchmarks"], root=REPO)
+    active = [f for f in findings if not f.suppressed]
+    assert active == [], "\n".join(f.render() for f in active)
+    # the known intentional violations are suppressed WITH reasons
+    suppressed = {(f.path, f.rule) for f in findings if f.suppressed}
+    assert ("src/repro/serve/engine.py", "purity-state-mutation") in suppressed
+    assert ("src/repro/serve/scheduler.py", "purity-state-mutation") in suppressed
+    assert all(f.suppress_reason for f in findings if f.suppressed)
+
+
+def test_seeded_negative_clock_in_scheduler_step():
+    src = (REPO / "src/repro/serve/scheduler.py").read_text()
+    marker = "self.decode_traces += 1"
+    assert marker in src
+    bad = src.replace(
+        marker,
+        marker + "\n            import time\n            _t = time.time()",
+    )
+    fs = lint_sources({"src/repro/serve/scheduler.py": bad})
+    active = rules_of(fs)
+    assert "purity-host-time" in active
+    assert "conv-host-clock" in active
+
+
+def test_seeded_negative_global_seed_in_test():
+    src = (REPO / "tests/test_sampling.py").read_text()
+    bad = "import numpy as np\nnp.random.seed(0)\n" + src
+    fs = lint_sources({"tests/test_sampling.py": bad})
+    assert "conv-global-random" in rules_of(fs)
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = tmp_path / "src" / "repro" / "ok.py"
+    clean.parent.mkdir(parents=True)
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "src" / "repro" / "bad.py"
+    dirty.write_text(
+        "import jax\nimport time\n\n"
+        "@jax.jit\ndef step(x):\n    return x + time.time()\n"
+    )
+    assert cli_main([str(clean), "--root", str(tmp_path)]) == 0
+    assert cli_main([str(dirty), "--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "purity-host-time" in out
+    assert cli_main(["--explain", "purity-host-time"]) == 0
+    assert cli_main(["--explain", "no-such-rule"]) == 2
+    assert cli_main(["--rules", "bogus", str(clean)]) == 2
+    assert cli_main(["--list-rules"]) == 0
+
+
+def test_cli_json_output(tmp_path, capsys):
+    f = tmp_path / "benchmarks" / "b.py"
+    f.parent.mkdir(parents=True)
+    f.write_text("import numpy as np\nnp.random.seed(3)\n")
+    assert cli_main(["--json", str(f), "--root", str(tmp_path)]) == 1
+    import json
+    data = json.loads(capsys.readouterr().out)
+    assert data["counts"]["active"] == 1
+    assert data["findings"][0]["rule"] == "conv-global-random"
+
+
+def test_cli_module_entrypoint():
+    # the CI invocation shape: python -m repro.analysis.cli <paths>
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.cli", "src", "tests",
+         "benchmarks"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
